@@ -1,0 +1,88 @@
+"""Kernel microbenchmarks + the engine's own roofline model.
+
+Bulk bitwise ops have arithmetic intensity ~#ops / 12 bytes, so on the
+TPU target they are HBM-bound: ideal time = bytes / 819 GB/s. We report
+measured CPU wall time (interpret mode - correctness signal only) AND the
+modeled TPU roofline time per call, plus the fusion win: a fused
+expression of k ops touches (k_inputs+1) buffers instead of 3 per op
+(the AAP-chain/RowClone copy-avoidance analogue, Section 3.1.4)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+HBM_BW = 819e9
+
+
+def _time(fn, *args, reps=3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def kernels_micro() -> List[Row]:
+    from repro.core import expr as E
+    from repro.kernels import ops, ref
+
+    rows: List[Row] = []
+    rng = np.random.default_rng(0)
+    shape = (256, 4096)  # 4 MB packed = 128 Mbit operands
+    nbytes = int(np.prod(shape)) * 4
+    arrs = {k: jnp.asarray(rng.integers(0, 2**32, shape, dtype=np.uint32))
+            for k in "abc"}
+
+    x, y, z = E.Expr.var("a"), E.Expr.var("b"), E.Expr.var("c")
+    single = x & y
+    fused = ((x & y) | ~z) ^ (x | z)
+
+    us1 = _time(lambda: ops.bitwise_eval(single, arrs))
+    usf = _time(lambda: ops.bitwise_eval(fused, arrs))
+    ideal1 = 3 * nbytes / HBM_BW * 1e6
+    # fused: 3 inputs + 1 output vs 4 ops x 3 buffers unfused
+    ideal_f = 4 * nbytes / HBM_BW * 1e6
+    ideal_unfused = 4 * 3 * nbytes / HBM_BW * 1e6
+    rows.append(("kern_bitwise_and", us1,
+                 f"tpu_roofline={ideal1:.1f}us bytes={3*nbytes}"))
+    rows.append(("kern_bitwise_fused4", usf,
+                 f"tpu_roofline={ideal_f:.1f}us vs_unfused="
+                 f"{ideal_unfused:.1f}us fusion_win="
+                 f"{ideal_unfused/ideal_f:.1f}x"))
+
+    us = _time(lambda: ops.popcount(arrs["a"]))
+    rows.append(("kern_popcount", us,
+                 f"tpu_roofline={nbytes/HBM_BW*1e6:.1f}us"))
+
+    vals = rng.integers(0, 2**12, 2**20).astype(np.uint32)
+    planes = ref.bitslice(jnp.asarray(vals), 12)
+    us = _time(lambda: ops.bitweaving_scan(planes, 100, 3000))
+    pb = int(planes.size) * 4
+    rows.append(("kern_bitweaving_b12", us,
+                 f"tpu_roofline={pb/HBM_BW*1e6:.2f}us "
+                 f"vs_int32_scan={4*2**20/HBM_BW*1e6:.2f}us "
+                 f"traffic_saving={4*2**20/pb:.1f}x"))
+
+    m = n = 256
+    k = 4096
+    from repro.core.bitvector import pack_bits
+    a = pack_bits(jnp.asarray(rng.integers(0, 2, (m, k)), jnp.uint32))
+    b = pack_bits(jnp.asarray(rng.integers(0, 2, (n, k)), jnp.uint32))
+    us_vpu = _time(lambda: ops.binary_matmul(a, b, k))
+    us_mxu = _time(lambda: ops.binary_matmul_mxu(a, b, k))
+    xnor_ops = m * n * (k // 32) * 3  # xor+popcount+add per word
+    mxu_flops = 2 * m * n * k
+    rows.append(("kern_binary_matmul_vpu", us_vpu,
+                 f"word_ops={xnor_ops:.3g} packed_bytes={(m+n)*k//8}"))
+    rows.append(("kern_binary_matmul_mxu", us_mxu,
+                 f"mxu_flops={mxu_flops:.3g} "
+                 f"tpu_mxu_time={mxu_flops/197e12*1e6:.2f}us"))
+    return rows

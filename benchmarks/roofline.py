@@ -1,0 +1,96 @@
+"""Aggregate dry-run artifacts into the roofline table (SSRoofline).
+
+Reads artifacts/dryrun/*.json produced by repro.launch.dryrun and emits
+a markdown table + CSV rows. Single-pod mesh only for the table (the
+multi-pod pass proves the pod axis shards; both are summarized)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Tuple
+
+Row = Tuple[str, float, str]
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+OPT_DIR = os.environ.get("DRYRUN_OPT_DIR", "artifacts/dryrun_opt")
+
+
+def load_cells(mesh: str = "single_pod_16x16",
+               directory: str = ARTIFACT_DIR) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("mesh") == mesh:
+            cells.append(r)
+    return cells
+
+
+def bottleneck_note(cell: Dict) -> str:
+    dom = cell["dominant"]
+    if dom == "compute_s":
+        return "raise MXU utilization (larger per-chip matmuls/microbatch)"
+    if dom == "memory_s":
+        return ("cut activation materialization: custom-VJP flash attention,"
+                " bf16 residuals, fused norms")
+    return "reshard to cut collectives (seq-parallel psum->reduce-scatter)"
+
+
+def markdown_table(mesh: str = "single_pod_16x16") -> str:
+    cells = load_cells(mesh)
+    lines = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant |"
+        " MODEL_FLOPS | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        t = c["roofline"]
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {t['compute_s']:.3g} | "
+            f"{t['memory_s']:.3g} | {t['collective_s']:.3g} | "
+            f"{c['dominant'].replace('_s','')} | {c['model_flops']:.3g} | "
+            f"{c['useful_flops_ratio']:.3f} | "
+            f"{c.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(lines)
+
+
+def roofline_rows() -> List[Row]:
+    rows: List[Row] = []
+    for tag, directory in (("base", ARTIFACT_DIR), ("opt", OPT_DIR)):
+        if not os.path.isdir(directory):
+            continue
+        baseline = {} if tag == "opt" else None
+        if tag == "opt":
+            for c in load_cells("single_pod_16x16", ARTIFACT_DIR):
+                baseline[(c["arch"], c["shape"])] = max(
+                    c["roofline"].values())
+        for mesh in ("single_pod_16x16", "multi_pod_2x16x16"):
+            cells = load_cells(mesh, directory)
+            if not cells:
+                continue
+            n_dom = {"compute_s": 0, "memory_s": 0, "collective_s": 0}
+            for c in cells:
+                n_dom[c["dominant"]] += 1
+            rows.append((f"roofline_{tag}_{mesh}", 0.0,
+                         f"cells={len(cells)} "
+                         f"compute-bound={n_dom['compute_s']}"
+                         f" memory-bound={n_dom['memory_s']} "
+                         f"collective-bound={n_dom['collective_s']}"))
+            for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+                t = c["roofline"]
+                extra = ""
+                if tag == "opt" and mesh == "single_pod_16x16":
+                    b = baseline.get((c["arch"], c["shape"]))
+                    if b:
+                        extra = f" binding_speedup={b/max(t.values()):.1f}x"
+                rows.append((
+                    f"cell_{tag}_{c['arch']}_{c['shape']}_"
+                    f"{mesh.split('_')[0]}", 0.0,
+                    f"comp={t['compute_s']:.3g}s mem={t['memory_s']:.3g}s "
+                    f"coll={t['collective_s']:.3g}s dom="
+                    f"{c['dominant'].replace('_s','')} "
+                    f"useful={c['useful_flops_ratio']:.3f} "
+                    f"frac={c.get('roofline_fraction', 0):.4f}" + extra))
+    return rows

@@ -1,0 +1,47 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Sections:
+  fig20_*   AAP program counts (compiler opt) + bit-exactness
+  table3_*  TRA failure rate vs process variation (Monte Carlo)
+  fig21_*   raw throughput model vs Skylake/GTX745/HMC (+Ambit-3D)
+  table4_*  energy nJ/KB vs DDR3 baseline
+  fig22_*   bitmap index queries        (Section 8.1)
+  fig23_*   BitWeaving predicate scans  (Section 8.2)
+  fig24_*   bitvector set operations    (Section 8.3)
+  kern_*    Pallas kernel micro + engine roofline model
+  roofline_* / cell_*  dry-run roofline aggregation (SSRoofline)
+"""
+
+import sys
+
+
+def main() -> None:
+    from . import kernels_micro, paper_apps, paper_tables, roofline
+
+    sections = [
+        paper_tables.fig20_programs,
+        paper_tables.table3_variation,
+        paper_tables.fig21_throughput,
+        paper_tables.table4_energy,
+        paper_apps.fig22_bitmap,
+        paper_apps.fig23_bitweaving,
+        paper_apps.fig24_sets,
+        kernels_micro.kernels_micro,
+        roofline.roofline_rows,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for fn in sections:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.2f},{derived}")
+        except Exception as e:  # keep the harness robust
+            failures += 1
+            print(f"{fn.__name__},0.0,ERROR {type(e).__name__}: {e}")
+            sys.stderr.write(f"benchmark {fn.__name__} failed: {e}\n")
+    if failures:
+        raise SystemExit(f"{failures} benchmark section(s) failed")
+
+
+if __name__ == "__main__":
+    main()

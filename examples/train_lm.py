@@ -1,0 +1,90 @@
+"""End-to-end training driver: train a small LM for a few hundred steps
+with the full production loop - BitWeaving-filtered data pipeline, AdamW,
+checkpointing, fault-tolerant supervisor, straggler watchdog.
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 300
+      PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 200
+(the default preset is CPU-friendly ~2M params; --preset 100m builds a
+~100M-param model - a few hours of CPU, minutes on one accelerator)
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data.pipeline import DataConfig, FilteredSyntheticLM
+from repro.models import build_model
+from repro.optim.optimizer import OptimizerConfig
+from repro.runtime import Supervisor
+from repro.train.step import init_state, make_train_step
+
+
+def build_cfg(preset: str):
+    base = get_config("qwen2.5-3b")
+    if preset == "100m":
+        return dataclasses.replace(
+            base, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            d_head=64, d_ff=2048, vocab=32768)
+    return dataclasses.replace(
+        base, n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+        d_head=32, d_ff=512, vocab=2048)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--preset", default="small", choices=["small", "100m"])
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="artifacts/train_lm_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = build_cfg(args.preset)
+    model = build_model(cfg)
+    print(f"model: {cfg.name}-{args.preset} "
+          f"N={model.n_params()/1e6:.1f}M params")
+
+    opt = OptimizerConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, opt, remat=False))
+    data = FilteredSyntheticLM(
+        DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                   global_batch=args.batch, noise=0.02),
+        n_docs=4096)
+    print(f"data: {data.mask.sum()}/{len(data.mask)} docs pass the "
+          f"BitWeaving quality filter")
+
+    def batch_at(s):
+        b = data.batch_at(s)
+        return {"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])}
+
+    ck = Checkpointer(args.ckpt_dir, keep_n=3)
+    start = 0
+    if args.resume and ck.latest_step() is not None:
+        start, state = ck.restore()
+        print(f"resumed from step {start}")
+    else:
+        state = init_state(model, jax.random.PRNGKey(0))
+
+    sup = Supervisor(ck, checkpoint_every=50)
+    t0 = time.time()
+    state, hist = sup.run(state, batch_at, step_fn, start, args.steps)
+    dt = time.time() - t0
+    losses = [h["loss"] for h in hist if "loss" in h]
+    toks = args.batch * args.seq * len(losses)
+    print(f"steps {start}->{args.steps}: loss {losses[0]:.3f} -> "
+          f"{np.mean(losses[-10:]):.3f}  ({toks/dt:.0f} tok/s)")
+    slow = [h["step"] for h in hist if h.get("slow")]
+    if slow:
+        print(f"straggler watchdog flagged steps: {slow}")
+
+
+if __name__ == "__main__":
+    main()

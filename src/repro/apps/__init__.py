@@ -1,0 +1,1 @@
+"""Paper application workloads built on the BulkBitwiseEngine."""

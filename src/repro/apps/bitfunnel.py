@@ -1,0 +1,51 @@
+"""BitFunnel-style document filtering (paper Section 8.4.1).
+
+Documents are Bloom-filter bit columns: a document-major bit matrix where
+row r is "documents whose Bloom filter has bit r set". A query ANDs the
+rows of its terms' hash positions; surviving bits are candidate documents
+(supersets: Bloom false positives are verified downstream). Bulk bitwise
+AND over thousands of documents per word is exactly Ambit's sweet spot.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Sequence
+
+import numpy as np
+
+from ..core import BitVector, BulkBitwiseEngine
+
+
+def _hashes(term: str, k: int, m: int) -> List[int]:
+    out = []
+    h = 2166136261
+    for i in range(k):
+        for ch in f"{term}/{i}":
+            h = (h ^ ord(ch)) * 16777619 % (1 << 32)
+        out.append(h % m)
+    return out
+
+
+class BitFunnelIndex:
+    def __init__(self, n_docs: int, filter_bits: int = 512, k: int = 3,
+                 engine: BulkBitwiseEngine = None):
+        self.n_docs = n_docs
+        self.m = filter_bits
+        self.k = k
+        self.engine = engine or BulkBitwiseEngine("jnp")
+        # rows[r] = bitvector over documents having Bloom bit r
+        self._rows = np.zeros((filter_bits, n_docs), bool)
+
+    def add_document(self, doc_id: int, terms: Iterable[str]) -> None:
+        for t in terms:
+            for h in _hashes(t, self.k, self.m):
+                self._rows[h, doc_id] = True
+
+    def query(self, terms: Sequence[str]) -> np.ndarray:
+        """Candidate doc ids containing ALL terms (Bloom superset)."""
+        rows = sorted({h for t in terms for h in _hashes(t, self.k, self.m)})
+        acc = BitVector.from_bits(self._rows[rows[0]])
+        for r in rows[1:]:
+            acc = self.engine.and_(acc, BitVector.from_bits(self._rows[r]))
+        bits = np.asarray(acc.bits())[:self.n_docs]
+        return np.nonzero(bits)[0]

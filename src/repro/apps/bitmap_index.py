@@ -1,0 +1,72 @@
+"""Bitmap index (paper Section 8.1).
+
+Tracks user characteristics/activity as bitvectors (bit u = user u).
+The paper's workload: "how many unique users were active every week for
+the past w weeks?" = popcount(AND of w weekly bitmaps); "how many male
+users were active each week?" = w popcounts of (weekly AND gender).
+
+All bulk ops route through the BulkBitwiseEngine, so the same query runs
+on the jnp/pallas backends (performance) or the ambit_sim backend
+(paper-fidelity, returning DRAM ns/nJ for the Fig. 22 benchmark).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import BitVector, BulkBitwiseEngine, Expr
+from ..core.engine import OpStats
+
+
+class BitmapIndex:
+    def __init__(self, n_users: int, engine: BulkBitwiseEngine):
+        self.n_users = n_users
+        self.engine = engine
+        self.bitmaps: Dict[str, BitVector] = {}
+
+    def add(self, name: str, members: np.ndarray) -> None:
+        bits = np.zeros(self.n_users, bool)
+        bits[members] = True
+        self.bitmaps[name] = BitVector.from_bits(bits)
+
+    def query_and_all(self, names: List[str]) -> Tuple[int, OpStats]:
+        """popcount(AND over names) + accumulated engine stats."""
+        total = OpStats()
+        acc = self.bitmaps[names[0]]
+        for nm in names[1:]:
+            acc = self.engine.and_(acc, self.bitmaps[nm])
+            st = self.engine.last_stats
+            if st:
+                total.ns += st.ns
+                total.energy_nj += st.energy_nj
+                total.aap_count += st.aap_count
+        return int(self.engine.popcount(acc)), total
+
+    def weekly_active_query(self, weeks: List[str], gender: str
+                            ) -> Tuple[int, List[int], OpStats]:
+        """The paper's two-part query (Section 8.1)."""
+        total = OpStats()
+        unique_all, st = self.query_and_all(weeks)
+        total.ns += st.ns
+        total.energy_nj += st.energy_nj
+        per_week = []
+        g = self.bitmaps[gender]
+        for wk in weeks:
+            inter = self.engine.and_(self.bitmaps[wk], g)
+            st2 = self.engine.last_stats
+            if st2:
+                total.ns += st2.ns
+                total.energy_nj += st2.energy_nj
+            per_week.append(int(self.engine.popcount(inter)))
+        return unique_all, per_week, total
+
+
+def baseline_cpu_ns(n_users: int, n_ops: int,
+                    bw_bytes_per_s: float = 34e9) -> float:
+    """Model of the DDR3-channel-bound CPU baseline (Section 7): each bulk
+    AND streams 2 reads + 1 write of n_users/8 bytes at channel bandwidth."""
+    bytes_moved = 3 * (n_users / 8) * n_ops
+    return bytes_moved / bw_bytes_per_s * 1e9

@@ -1,0 +1,222 @@
+"""BulkBitwiseEngine: the `bbop` execution model exposed to applications.
+
+Three interchangeable backends compute identical results:
+
+  * "jnp"       - jitted jax.numpy over packed uint32 (portable reference).
+  * "pallas"    - fused Pallas TPU kernel per expression (interpret=True on
+                  CPU); the TPU-native realization of AAP-chain fusion.
+  * "ambit_sim" - the bit-accurate DRAM device model (core/simulator.py),
+                  which also returns the paper's DRAM timing/energy ledger.
+
+The engine is the system-integration layer of Section 5: the bbop ISA
+(and/or/xor/... over row-aligned operands), the driver's co-location
+contract (operands of one call share sharding), and the accounting needed
+by the paper-table benchmarks.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import expr as E
+from .bitvector import BitVector
+from .compiler import compile_expr
+from .geometry import DEFAULT_GEOMETRY, DRAMGeometry
+from .simulator import AmbitSubarray
+from .timing import DEFAULT_TIMING, CommandStats, TimingParams
+
+
+@dataclasses.dataclass
+class OpStats:
+    """Per-call accounting (DRAM model units when backend=ambit_sim)."""
+
+    ns: float = 0.0
+    energy_nj: float = 0.0
+    aap_count: int = 0
+    bytes_touched: int = 0
+
+
+class BulkBitwiseEngine:
+    def __init__(self, backend: str = "jnp",
+                 geometry: DRAMGeometry = DEFAULT_GEOMETRY,
+                 timing: TimingParams = DEFAULT_TIMING,
+                 optimize: bool = True):
+        if backend not in ("jnp", "pallas", "ambit_sim"):
+            raise ValueError(backend)
+        self.backend = backend
+        self.geometry = geometry
+        self.timing = timing
+        self.optimize = optimize
+        self.last_stats: Optional[OpStats] = None
+
+    # -- expression evaluation ------------------------------------------------
+
+    def eval(self, expression: E.Expr,
+             env: Dict[str, BitVector]) -> BitVector:
+        some = next(iter(env.values()))
+        n_bits = some.n_bits
+        for v in env.values():
+            if v.n_bits != n_bits or v.data.shape != some.data.shape:
+                raise ValueError("bbop operands must be row-aligned and "
+                                 "equal-sized (Section 5.3)")
+        if self.backend == "ambit_sim":
+            return self._eval_sim(expression, env, n_bits)
+        arrays = {k: v.data for k, v in env.items()}
+        if self.backend == "pallas":
+            from ..kernels import ops as kops
+            out = kops.bitwise_eval(expression, arrays)
+        else:
+            out = _jnp_eval(expression, arrays)
+        self.last_stats = OpStats(
+            bytes_touched=sum(v.nbytes for v in env.values()) + out.nbytes
+            if hasattr(out, "nbytes") else 0)
+        return BitVector(out, n_bits)
+
+    # -- bbop-style binary ops -------------------------------------------------
+
+    def _binop(self, op: str, a: BitVector, b: BitVector) -> BitVector:
+        x, y = E.Expr.var("a"), E.Expr.var("b")
+        table = {"and": x & y, "or": x | y, "xor": x ^ y,
+                 "nand": ~(x & y), "nor": ~(x | y), "xnor": ~(x ^ y)}
+        return self.eval(table[op], {"a": a, "b": b})
+
+    def and_(self, a, b):
+        return self._binop("and", a, b)
+
+    def or_(self, a, b):
+        return self._binop("or", a, b)
+
+    def xor(self, a, b):
+        return self._binop("xor", a, b)
+
+    def nand(self, a, b):
+        return self._binop("nand", a, b)
+
+    def nor(self, a, b):
+        return self._binop("nor", a, b)
+
+    def xnor(self, a, b):
+        return self._binop("xnor", a, b)
+
+    def not_(self, a: BitVector) -> BitVector:
+        return self.eval(~E.Expr.var("a"), {"a": a})
+
+    def maj(self, a: BitVector, b: BitVector, c: BitVector) -> BitVector:
+        return self.eval(E.maj(E.Expr.var("a"), E.Expr.var("b"),
+                               E.Expr.var("c")), {"a": a, "b": b, "c": c})
+
+    def masked_set(self, x: BitVector, mask: BitVector) -> BitVector:
+        """Masked initialization (Section 8.4.2): x | mask."""
+        return self.or_(x, mask)
+
+    def masked_clear(self, x: BitVector, mask: BitVector) -> BitVector:
+        return self.eval(E.Expr.var("x") & ~E.Expr.var("m"),
+                         {"x": x, "m": mask})
+
+    def popcount(self, a: BitVector) -> jnp.ndarray:
+        """Bitcount (Section 9.1 future-op; we provide it natively)."""
+        if self.backend == "pallas":
+            from ..kernels import ops as kops
+            return kops.popcount(a.data)
+        return a.popcount()
+
+    def shift(self, a: BitVector, amount: int) -> BitVector:
+        """Logical bit shift by `amount` positions (Section 9.1 future-op:
+        "most arithmetic operations require some kind of bitwise shift").
+        Positive = toward higher bit indices; zeros shift in. In the DRAM
+        model a row-granular shift is a RowClone to an offset mapping; at
+        word granularity it is two shifts + OR per word - implemented here
+        over packed words for all backends (bit i of the result = bit
+        i-amount of the input)."""
+        from .bitvector import _mask_tail
+        n = a.n_bits
+        if amount == 0:
+            return BitVector(a.data, n)
+        data = a.data
+        w = 32
+        word_off, bit_off = divmod(abs(amount), w)
+        if amount > 0:
+            x = jnp.roll(data, word_off, axis=-1)
+            idx = jnp.arange(data.shape[-1])
+            x = jnp.where(idx < word_off, jnp.uint32(0), x)
+            if bit_off:
+                lo = x << jnp.uint32(bit_off)
+                carry = jnp.roll(x, 1, axis=-1) >> jnp.uint32(w - bit_off)
+                carry = jnp.where(idx == 0, jnp.uint32(0), carry)
+                x = lo | carry
+        else:
+            x = jnp.roll(data, -word_off, axis=-1)
+            idx = jnp.arange(data.shape[-1])
+            nw = data.shape[-1]
+            x = jnp.where(idx >= nw - word_off, jnp.uint32(0), x)
+            if bit_off:
+                hi = x >> jnp.uint32(bit_off)
+                carry = jnp.roll(x, -1, axis=-1) << jnp.uint32(w - bit_off)
+                carry = jnp.where(idx == nw - 1, jnp.uint32(0), carry)
+                x = hi | carry
+        return BitVector(_mask_tail(x, n), n)
+
+    # -- ambit_sim backend ------------------------------------------------------
+
+    def _eval_sim(self, expression: E.Expr, env: Dict[str, BitVector],
+                  n_bits: int) -> BitVector:
+        """Execute the compiled AAP program on the device model, row by row.
+
+        Each 'row' of the operand bitvectors maps to one D-group row of a
+        simulated subarray (the Section 5.2 driver's co-location contract:
+        corresponding rows of all operands share a subarray)."""
+        names = sorted(env.keys())
+        var_rows = {nm: i for i, nm in enumerate(names)}
+        dst_row = len(names)
+        compiled = compile_expr(expression, var_rows, dst_row,
+                                self.geometry.data_rows, self.optimize,
+                                self.timing)
+        # Pack to uint64 words for the simulator.
+        packed = {nm: _to_u64(np.asarray(env[nm].data)) for nm in names}
+        some = packed[names[0]]
+        lead = some.shape[:-1]
+        flat = {nm: a.reshape(-1, a.shape[-1]) for nm, a in packed.items()}
+        n_rows, words = next(iter(flat.values())).shape
+
+        out_rows = np.empty((n_rows, words), np.uint64)
+        total = CommandStats()
+        sub = AmbitSubarray(self.geometry, self.timing, words=words)
+        for r in range(n_rows):
+            for nm in names:
+                sub.write_row(var_rows[nm], flat[nm][r])
+            sub.stats = CommandStats()
+            sub.run(compiled.program)
+            out_rows[r] = sub.read_row(dst_row)
+            total.merge(sub.stats)
+
+        out32 = _to_u32(out_rows.reshape(lead + (words,)))
+        self.last_stats = OpStats(ns=total.ns, energy_nj=total.energy_nj,
+                                  aap_count=total.aap_count,
+                                  bytes_touched=out32.nbytes)
+        bv = BitVector(jnp.asarray(out32), n_bits)
+        # Padding rows beyond n_bits may be garbage from scratch state: mask.
+        from .bitvector import _mask_tail
+        return BitVector(_mask_tail(bv.data, n_bits), n_bits)
+
+
+def _to_u64(a32: np.ndarray) -> np.ndarray:
+    a32 = np.ascontiguousarray(a32, dtype=np.uint32)
+    if a32.shape[-1] % 2:
+        a32 = np.concatenate(
+            [a32, np.zeros(a32.shape[:-1] + (1,), np.uint32)], -1)
+    return a32.view(np.uint64)
+
+
+def _to_u32(a64: np.ndarray) -> np.ndarray:
+    return np.ascontiguousarray(a64).view(np.uint32)
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def _jnp_eval(expression: E.Expr, arrays: Dict[str, jnp.ndarray]):
+    return E.eval_expr(expression, arrays)

@@ -1,0 +1,332 @@
+"""Bit-accurate functional simulator of an Ambit DRAM device.
+
+Executes raw ACTIVATE/PRECHARGE command streams (and the AAP/AP macros of
+Section 4.2) against a modeled subarray with designated rows T0..T3, two
+dual-contact-cell rows (DCC0/DCC1), control rows C0/C1, and D-group data
+rows. Semantics follow Sections 2-4:
+
+* ACTIVATE from the precharged state connects the addressed wordline(s) to
+  the bitlines; charge sharing + sense amplification resolve the row buffer:
+    - one d-wordline cell: row buffer = cell (and the cell is restored);
+    - one n-wordline (DCC): the capacitor drives bitline-bar, so the row
+      buffer resolves to the negated capacitor value (Section 3.2);
+    - three cells (TRA): row buffer = bitwise MAJORITY, and *all three*
+      cells are overwritten with the result (Section 3.1, issue 3);
+    - two cells: only defined when both cells agree (Ambit only issues
+      2-wordline addresses as the second ACTIVATE of an AAP); a 2-cell
+      activation from precharged state with disagreeing cells is flagged.
+* ACTIVATE while the bank is already activated (second ACTIVATE of an AAP)
+  overwrites every newly-connected cell with the row-buffer value - through
+  the bitline for d-wordlines, negated through bitline-bar for n-wordlines.
+* PRECHARGE lowers all wordlines and disables the sense amplifiers.
+
+Rows are stored bit-packed as numpy uint64; all row-wide ops are vectorized.
+A timing/energy ledger (timing.py) accumulates per-command costs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from . import commands as cmd
+from .commands import (AAP, AP, Activate, Command, Macro, Precharge, RowAddr,
+                       dcc_capacitor, is_n_wordline, wordlines_for)
+from .geometry import DEFAULT_GEOMETRY, DRAMGeometry
+from .timing import DEFAULT_TIMING, CommandStats, TimingParams
+
+
+class AmbitError(RuntimeError):
+    """Raised when a command stream has undefined analog behaviour."""
+
+
+def _rand_rows(rng: np.random.Generator, n: int, words: int) -> np.ndarray:
+    return rng.integers(0, np.iinfo(np.uint64).max, size=(n, words),
+                        dtype=np.uint64)
+
+
+@dataclasses.dataclass
+class _SenseAmpState:
+    active: bool = False
+    rowbuf: Optional[np.ndarray] = None  # (words,) uint64 when active
+    open_wordlines: List[str] = dataclasses.field(default_factory=list)
+
+
+class AmbitSubarray:
+    """One subarray: D-rows + designated/control/DCC rows + sense amps."""
+
+    def __init__(self, geometry: DRAMGeometry = DEFAULT_GEOMETRY,
+                 timing: TimingParams = DEFAULT_TIMING,
+                 words: Optional[int] = None, seed: int = 0):
+        self.geom = geometry
+        self.timing = timing
+        self.words = geometry.row_words if words is None else words
+        rng = np.random.default_rng(seed)
+        # Data rows power up with undefined content; model as random.
+        self.d_rows = _rand_rows(rng, geometry.data_rows, self.words)
+        # Designated rows T0..T3 and DCC capacitors also undefined at boot.
+        self.t_rows: Dict[str, np.ndarray] = {
+            t: _rand_rows(rng, 1, self.words)[0] for t in cmd.T_WORDLINES}
+        self.dcc: Dict[str, np.ndarray] = {
+            d: _rand_rows(rng, 1, self.words)[0] for d in cmd.DCC_D_WORDLINES}
+        # Control rows are initialized at design time (Section 3.1.4).
+        self.c_rows = [np.zeros(self.words, np.uint64),
+                       np.full(self.words, np.iinfo(np.uint64).max, np.uint64)]
+        self.amp = _SenseAmpState()
+        self.stats = CommandStats()
+
+    # -- software-visible row access (models READ/WRITE via the controller) --
+
+    def write_row(self, d_index: int, data: np.ndarray) -> None:
+        if self.amp.active:
+            raise AmbitError("WRITE while bank activated is not modeled")
+        data = np.asarray(data, dtype=np.uint64)
+        if data.shape != (self.words,):
+            raise ValueError(f"row data must be ({self.words},) uint64")
+        self.d_rows[d_index] = data
+
+    def read_row(self, d_index: int) -> np.ndarray:
+        return self.d_rows[d_index].copy()
+
+    # -- cell plumbing ------------------------------------------------------
+
+    def _cell_value(self, wl: str) -> np.ndarray:
+        if wl.startswith("T"):
+            return self.t_rows[wl]
+        if wl.startswith("DCC"):
+            return self.dcc[dcc_capacitor(wl)]
+        if wl.startswith("C"):
+            return self.c_rows[int(wl[1:])]
+        if wl.startswith("D"):
+            return self.d_rows[int(wl[1:])]
+        raise KeyError(wl)
+
+    def _set_cell(self, wl: str, value: np.ndarray) -> None:
+        if wl.startswith("T"):
+            self.t_rows[wl] = value.copy()
+        elif wl.startswith("DCC"):
+            self.dcc[dcc_capacitor(wl)] = value.copy()
+        elif wl.startswith("C"):
+            # Control rows are pre-initialized constants: restoring the same
+            # value (single-cell activate) is fine; overwriting is a bug in
+            # the command stream (the controller never targets C rows).
+            if not np.array_equal(self.c_rows[int(wl[1:])], value):
+                raise AmbitError(f"control row {wl} is read-only")
+        elif wl.startswith("D"):
+            self.d_rows[int(wl[1:])] = value.copy()
+        else:
+            raise KeyError(wl)
+
+    # -- command execution --------------------------------------------------
+
+    def execute(self, stream: Sequence[Command]) -> None:
+        for c in stream:
+            if isinstance(c, Activate):
+                self._activate(c.addr)
+            elif isinstance(c, Precharge):
+                self._precharge()
+            else:
+                raise TypeError(c)
+
+    def run(self, prog: Sequence[Macro]) -> None:
+        """Execute a macro (AAP/AP) program, accounting macro-level timing."""
+        for m in prog:
+            self.stats.add_macro(m, self.timing)
+            self.execute(m.expand())
+
+    def _activate(self, addr: RowAddr) -> None:
+        wls = wordlines_for(addr)
+        if not self.amp.active:
+            self._activate_from_precharged(wls)
+        else:
+            self._activate_while_active(wls)
+
+    def _activate_from_precharged(self, wls: Sequence[str]) -> None:
+        # Effective bitline contribution of each cell: d-wordline cells drive
+        # the bitline with their value; an n-wordline DCC drives bitline-bar,
+        # equivalent to driving the bitline with its complement.
+        contribs = []
+        for wl in wls:
+            v = self._cell_value(wl)
+            contribs.append(~v if is_n_wordline(wl) else v)
+        k = len(contribs)
+        if k == 1:
+            rowbuf = contribs[0].copy()
+        elif k == 2:
+            if not np.array_equal(contribs[0], contribs[1]):
+                raise AmbitError(
+                    "2-wordline ACTIVATE from precharged state with "
+                    "disagreeing cells: bitline deviation is ~0 (undefined). "
+                    "Ambit only uses B8-B11 as AAP copy destinations.")
+            rowbuf = contribs[0].copy()
+        elif k == 3:
+            a, b, c = contribs
+            rowbuf = (a & b) | (b & c) | (c & a)  # TRA majority, Section 3.1.1
+        else:
+            raise AmbitError(f"{k}-wordline activation not supported")
+        # Sense amplification drives connected cells to the resolved value
+        # (restores single cells; overwrites all cells of a TRA - issue 3).
+        self.amp = _SenseAmpState(True, rowbuf, list(wls))
+        self._drive_connected(wls)
+
+    def _activate_while_active(self, wls: Sequence[str]) -> None:
+        # Second ACTIVATE of an AAP: the sense amps are stable, so every
+        # newly-raised wordline's cell is overwritten with the row buffer
+        # (negated for n-wordline connections).
+        assert self.amp.rowbuf is not None
+        self._drive_connected(wls)
+        self.amp.open_wordlines.extend(wls)
+
+    def _drive_connected(self, wls: Sequence[str]) -> None:
+        assert self.amp.rowbuf is not None
+        for wl in wls:
+            value = ~self.amp.rowbuf if is_n_wordline(wl) else self.amp.rowbuf
+            self._set_cell(wl, value)
+
+    def _precharge(self) -> None:
+        self.amp = _SenseAmpState()
+
+    # -- high-level op helpers (used by tests/engine) ------------------------
+
+    def bbop(self, op: str, dst: int, *srcs: int) -> None:
+        """Run a Figure-20 op on D-group rows: dst = op(*srcs)."""
+        tmpl = cmd.OP_TEMPLATES[op]
+        args = [cmd.D(s) for s in srcs] + [cmd.D(dst)]
+        self.run(tmpl(*args))
+
+
+class AmbitBank:
+    """A bank: a set of subarrays sharing I/O. RowClone-FPM works within a
+    subarray; inter-subarray/inter-bank copies use RowClone-PSM (TRANSFER,
+    Section 2.4) at cache-line granularity over the internal bus."""
+
+    PSM_NS_PER_CACHELINE = 5.0   # ~pipelined tCCD-limited transfer
+    PSM_NJ_PER_CACHELINE = 4.39  # derived from DDR3 channel energy ~ internal
+
+    def __init__(self, geometry: DRAMGeometry = DEFAULT_GEOMETRY,
+                 timing: TimingParams = DEFAULT_TIMING,
+                 subarrays: Optional[int] = None,
+                 words: Optional[int] = None, seed: int = 0):
+        self.geom = geometry
+        n_sub = geometry.subarrays_per_bank if subarrays is None else subarrays
+        self.subarrays = [AmbitSubarray(geometry, timing, words, seed + i)
+                          for i in range(n_sub)]
+        self.stats = CommandStats()
+
+    def psm_copy(self, src_sub: int, src_row: int, dst_sub: int,
+                 dst_row: int) -> None:
+        """RowClone-PSM between subarrays/banks: both rows are activated and
+        cache lines are TRANSFERred over the internal bus."""
+        data = self.subarrays[src_sub].read_row(src_row)
+        self.subarrays[dst_sub].write_row(dst_row, data)
+        row_bytes = self.subarrays[src_sub].words * 8
+        n_lines = row_bytes // 64
+        self.stats.ns += 2 * DEFAULT_TIMING.tRAS + n_lines * \
+            self.PSM_NS_PER_CACHELINE + DEFAULT_TIMING.tRP
+        self.stats.energy_nj += n_lines * self.PSM_NJ_PER_CACHELINE
+        self.stats.activates += 2
+        self.stats.precharges += 1
+
+    def total_stats(self) -> CommandStats:
+        agg = CommandStats()
+        agg.merge(self.stats)
+        for s in self.subarrays:
+            agg.merge(s.stats)
+        return agg
+
+
+class AmbitDevice:
+    """Chip-level view: banks operating in parallel + the bbop ISA (S5.1).
+
+    The driver/allocator abstraction (Section 5.2): `alloc` places bitvector
+    pages so corresponding rows of co-operating bitvectors land in the same
+    subarray, enabling RowClone-FPM for every staging copy."""
+
+    def __init__(self, geometry: DRAMGeometry = DEFAULT_GEOMETRY,
+                 timing: TimingParams = DEFAULT_TIMING,
+                 banks: Optional[int] = None, subarrays: Optional[int] = None,
+                 words: Optional[int] = None, seed: int = 0):
+        self.geom = geometry
+        n_banks = geometry.banks if banks is None else banks
+        self.banks = [AmbitBank(geometry, timing, subarrays, words, seed + 97 * b)
+                      for b in range(n_banks)]
+        self.words = self.banks[0].subarrays[0].words
+        self.row_bytes = self.words * 8
+        self._alloc_cursor = 0  # next free (bank, subarray, row) triple
+
+    # -- allocator (Section 5.2 driver) --------------------------------------
+
+    def alloc_rows(self, n_rows: int) -> List[tuple]:
+        """Allocate row slots striped across banks/subarrays for parallelism.
+        Returns [(bank, subarray, row), ...]."""
+        out = []
+        n_banks = len(self.banks)
+        n_subs = len(self.banks[0].subarrays)
+        data_rows = self.geom.data_rows
+        for _ in range(n_rows):
+            i = self._alloc_cursor
+            self._alloc_cursor += 1
+            bank = i % n_banks
+            sub = (i // n_banks) % n_subs
+            row = i // (n_banks * n_subs)
+            if row >= data_rows:
+                raise AmbitError("device full")
+            out.append((bank, sub, row))
+        return out
+
+    # -- bbop ISA (Section 5.1) ----------------------------------------------
+
+    def bbop(self, op: str, dst: Sequence[tuple], *srcs: Sequence[tuple]
+             ) -> None:
+        """bbop dst, src1[, src2], size - operands are row-slot lists of the
+        same length (size = len * row_bytes, a multiple of the row size).
+
+        If corresponding slots are co-located in one subarray, the op runs
+        fully in-subarray (RowClone-FPM staging). Otherwise sources are
+        first PSM-copied into the destination's subarray (slow path)."""
+        for i, d in enumerate(dst):
+            slot_srcs = [s[i] for s in srcs]
+            self._bbop_row(op, d, slot_srcs)
+
+    def _bbop_row(self, op: str, dst: tuple, srcs: List[tuple]) -> None:
+        db, ds, dr = dst
+        bank = self.banks[db]
+        staged = []
+        # Scratch rows for staging PSM copies live at the top of the D-group.
+        scratch = self.geom.data_rows - 1
+        for (sb, ss, sr) in srcs:
+            if (sb, ss) == (db, ds):
+                staged.append(sr)
+            else:  # slow path: stage into the destination subarray
+                if sb == db:
+                    bank.psm_copy(ss, sr, ds, scratch)
+                else:
+                    data = self.banks[sb].subarrays[ss].read_row(sr)
+                    bank.subarrays[ds].write_row(scratch, data)
+                    row_bytes = self.row_bytes
+                    bank.stats.ns += 2 * DEFAULT_TIMING.tRAS + \
+                        (row_bytes // 64) * AmbitBank.PSM_NS_PER_CACHELINE
+                    bank.stats.energy_nj += (row_bytes // 64) * \
+                        AmbitBank.PSM_NJ_PER_CACHELINE
+                staged.append(scratch)
+                scratch -= 1
+        bank.subarrays[ds].bbop(op, dr, *staged)
+
+    # -- convenience ----------------------------------------------------------
+
+    def write(self, slots: Sequence[tuple], data: np.ndarray) -> None:
+        data = np.asarray(data, np.uint64).reshape(len(slots), self.words)
+        for (b, s, r), row in zip(slots, data):
+            self.banks[b].subarrays[s].write_row(r, row)
+
+    def read(self, slots: Sequence[tuple]) -> np.ndarray:
+        return np.stack([self.banks[b].subarrays[s].read_row(r)
+                         for (b, s, r) in slots])
+
+    def total_stats(self) -> CommandStats:
+        agg = CommandStats()
+        for b in self.banks:
+            agg.merge(b.total_stats())
+        return agg

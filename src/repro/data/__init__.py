@@ -1,0 +1,2 @@
+from .pipeline import (CorpusMeta, DataConfig, FilteredSyntheticLM,
+                       SyntheticLM, filter_documents, synth_corpus_meta)

@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the Ambit bulk-bitwise hot spots.
+
+Each kernel module pairs with a pure-jnp oracle in ref.py; ops.py holds the
+jitted public wrappers (padding + backend selection).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,304 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell on
+the production meshes and record memory/cost/collective analyses.
+
+The two lines above MUST stay first: jax locks the device count at first
+init, and the dry-run needs 512 placeholder host devices for the
+(2,16,16) multi-pod mesh. Smoke tests and benchmarks do NOT import this
+module, so they see the real single CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2.5-3b \
+      --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import REGISTRY, get_config, shape_applicable, SHAPES
+from ..models import build_model
+from ..models.param import ShardingRules, map_tree, spec_tree
+from ..models.sharding_ctx import axis_rules
+from ..optim.optimizer import OptimizerConfig
+from ..train.step import make_train_step
+from .hloparse import collective_bytes, dot_flops, traffic_bytes
+from .mesh import make_production_mesh, mesh_shape_dict
+
+# Hardware model (assignment constants): TPU v5e-like.
+PEAK_FLOPS = 197e12        # bf16 / chip
+HBM_BW = 819e9             # bytes/s / chip
+ICI_BW = 50e9              # bytes/s / link
+
+
+def sharding_rules_for(shape_name: str, batch: int,
+                       mesh_axes, ep2d: bool = False) -> ShardingRules:
+    """Baseline rules per shape kind.
+
+    decode_32k: the KV cache dominates memory and GQA kv_heads rarely
+    divide the 16-way TP axis, so the cache SEQUENCE dim shards over
+    "model" (decode softmax over a sharded seq lowers to psum-style
+    collectives). kv_seq is listed before kv_heads in the cache axes, so
+    it claims "model" first; archs whose kv_heads could shard get the
+    same (equivalent-memory) layout.
+
+    long_500k (batch=1): batch axes idle; the cache seq shards over BOTH
+    data and model (512-way on the multi-pod mesh)."""
+    rules = ShardingRules()
+    if shape_name == "long_500k" or batch == 1:
+        # batch axes idle; cache seq shards 512-way; weights replicate
+        # over the idle data axis (FSDP gathers per decoded token would
+        # dominate the collective term - SSPerf hillclimb 2, iter 3).
+        return rules.with_overrides(batch=(), kv_seq=("data", "model"),
+                                    embed=(), embed_pod=())
+    if shape_name.startswith("decode"):
+        # Serving: no FSDP on weights (per-token regathering would bind
+        # the collective term); TP sharding carries the memory. 2D-EP
+        # cells shard experts over (data x model) so the shard_map
+        # boundary needs no weight movement (SSPerf hillclimb 3).
+        over = dict(kv_seq=("model",), embed=(), embed_pod=())
+        if ep2d:
+            over["expert"] = ("data", "model")
+        return rules.with_overrides(**over)
+    return rules
+
+
+def input_specs(arch: str, shape_name: str) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((b, s), i32), "labels": sds((b, s), i32)}
+    elif shape.kind == "prefill":
+        batch = {"tokens": sds((b, s), i32)}
+    else:  # decode: one new token against a seq_len cache
+        batch = {"tokens": sds((b, 1), i32), "pos": sds((b,), i32)}
+    if cfg.family == "vlm" and shape.kind != "decode":
+        batch["vision_embeds"] = sds((b, cfg.vision_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+        batch["vision_positions"] = sds((b, cfg.vision_tokens), i32)
+        batch["mrope_positions"] = sds((3, b, s), i32)
+    if cfg.enc_dec and shape.kind != "decode":
+        batch["frames"] = sds((b, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+def batch_spec(batch: Dict[str, Any], rules: ShardingRules,
+               mesh_shape: Dict[str, int]) -> Dict[str, Any]:
+    """PartitionSpecs for the input batch (batch dim over DP axes)."""
+    from ..models.param import ParamDef, spec_for
+    table = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":
+            axes = (None, "batch") + (None,) * (len(v.shape) - 2)
+        else:
+            axes = ("batch",) + (None,) * (len(v.shape) - 1)
+        table[k] = spec_for(ParamDef(v.shape, axes, v.dtype), rules,
+                            mesh_shape)
+    return table
+
+
+def build_cell(arch: str, shape_name: str, mesh) -> Tuple[Any, tuple, tuple]:
+    """Returns (fn, arg_shapes, in_shardings) for jit lowering."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ms = mesh_shape_dict(mesh)
+    ep2d = (shape.kind == "decode" and cfg.moe is not None
+            and cfg.moe.n_experts >= 64)
+    if ep2d:
+        # serving config: pad experts to data*model for the 2D
+        # expert-parallel path (weights stationary; SSPerf hillclimb 3)
+        pad2d = ms.get("data", 1) * ms.get("model", 1)
+        cfg = _dc.replace(cfg, moe=_dc.replace(cfg.moe, pad_to=pad2d))
+    model = build_model(cfg)
+    rules = sharding_rules_for(shape_name, shape.global_batch, ms,
+                               ep2d=ep2d)
+    pspecs = model.param_specs(rules, ms)
+    pshapes = model.param_shapes()
+    batch = input_specs(arch, shape_name)
+    bspecs = batch_spec(batch, rules, ms)
+
+    def shard(tree_specs):
+        return map_tree(lambda s: NamedSharding(mesh, s), tree_specs)
+
+    if shape.kind == "train":
+        opt_cfg = OptimizerConfig()
+        step_fn = make_train_step(model, opt_cfg, mesh=mesh,
+                                  remat="save_attn")
+        state_shapes = {
+            "params": pshapes,
+            "opt": {"m": pshapes, "v": pshapes,
+                    "step": jax.ShapeDtypeStruct((), jnp.int32)},
+        }
+        state_specs = {
+            "params": pspecs,
+            "opt": {"m": pspecs, "v": pspecs, "step": P()},
+        }
+        return (step_fn, (state_shapes, batch),
+                (shard(state_specs), shard(bspecs)))
+
+    if shape.kind == "prefill":
+        def fn(params, b):
+            return model.prefill(params, b, skv=shape.seq_len, mesh=mesh)
+        serve_shapes = model.param_shapes(dtype=jnp.bfloat16)
+        return fn, (serve_shapes, batch), (shard(pspecs), shard(bspecs))
+
+    # decode
+    cache_shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+    cache_specs = model.cache_specs(shape.global_batch, shape.seq_len,
+                                    rules, ms)
+
+    def fn(params, caches, b):
+        return model.decode_step(params, caches, b, mesh=mesh)
+
+    serve_shapes = model.param_shapes(dtype=jnp.bfloat16)
+    return (fn, (serve_shapes, cache_shapes, batch),
+            (shard(pspecs), shard(cache_specs), shard(bspecs)))
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    t0 = time.time()
+    fn, arg_shapes, in_shardings = build_cell(arch, shape_name, mesh)
+
+    ms = mesh_shape_dict(mesh)
+    rules = sharding_rules_for(shape_name, shape.global_batch, ms)
+    with mesh, axis_rules(rules, ms):
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*arg_shapes)
+        compiled = lowered.compile()
+
+    t_compile = time.time() - t0
+    cost = compiled.cost_analysis() or {}
+    try:
+        mem = compiled.memory_analysis()
+        mem_info = {
+            "argument_size_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size_bytes":
+                getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+    except Exception as e:  # pragma: no cover - backend specific
+        mem_info = {"error": str(e)}
+    hlo = compiled.as_text()
+    # Per-device, trip-count weighted (XLA cost_analysis counts scan bodies
+    # once; see hloparse.py). collective bytes model: result+operand sizes.
+    coll_total, coll_kinds = collective_bytes(hlo)
+    flops_dev = dot_flops(hlo)
+    bytes_dev = traffic_bytes(hlo)
+
+    model = build_model(cfg)
+    n_params = model.n_params()
+    n_active = model.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 6.0 * n_active * tokens
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = 2.0 * n_active * tokens
+    else:
+        model_flops = 2.0 * n_active * shape.global_batch
+
+    hlo_flops = flops_dev * n_chips        # global
+    hlo_bytes = bytes_dev * n_chips
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    # collective bytes are parsed from the per-partition module = bytes
+    # through EACH chip's links
+    t_coll = coll_total / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    # fraction of roofline: useful model FLOPs time vs the binding term
+    ideal_s = model_flops / (n_chips * PEAK_FLOPS)
+    roofline_fraction = ideal_s / bound if bound > 0 else 0.0
+
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi_pod_2x16x16" if multi_pod else "single_pod_16x16",
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "compile_s": round(t_compile, 1),
+        "hlo_flops": hlo_flops,
+        "hlo_bytes": hlo_bytes,
+        "flops_per_chip": flops_dev,
+        "bytes_per_chip": bytes_dev,
+        "collective_bytes_per_chip": coll_total,
+        "collective_bytes": coll_total,
+        "collective_kinds": coll_kinds,
+        "xla_cost_raw": {k: cost.get(k) for k in
+                         ("flops", "bytes accessed")},
+        "memory_analysis": mem_info,
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / hlo_flops) if hlo_flops else 0,
+        "roofline_fraction": roofline_fraction,
+        "n_params": n_params, "n_active_params": n_active,
+        "roofline": terms, "dominant": dominant,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}__{shape_name}__{result['mesh']}.json"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch in REGISTRY:
+            for shape_name, shape in SHAPES.items():
+                if shape_applicable(get_config(arch), shape):
+                    cells.append((arch, shape_name))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = 0
+    for arch, shape_name in cells:
+        try:
+            r = run_cell(arch, shape_name, args.multi_pod, args.out)
+            terms = r["roofline"]
+            print(f"OK  {arch:24s} {shape_name:12s} {r['mesh']:20s} "
+                  f"compile={r['compile_s']:6.1f}s "
+                  f"flops={r['hlo_flops']:.3e} bytes={r['hlo_bytes']:.3e} "
+                  f"coll={r['collective_bytes']:.3e} "
+                  f"dom={r['dominant']} "
+                  f"roofline={r['roofline_fraction']:.3f} "
+                  f"useful={r['useful_flops_ratio']:.3f}", flush=True)
+            print(f"    memory_analysis: {r['memory_analysis']}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"FAIL {arch} {shape_name}", flush=True)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Production mesh definitions.
+
+make_production_mesh is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first init.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """Single pod: (16,16) ("data","model") = 256 chips.
+    Multi-pod: (2,16,16) ("pod","data","model") = 512 chips; the pod axis
+    composes with data for DP/FSDP (and optionally hosts pipeline stages).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1) -> jax.sharding.Mesh:
+    """Small mesh over whatever devices exist (tests / local runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_shape_dict(mesh: jax.sharding.Mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))

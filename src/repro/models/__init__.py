@@ -1,0 +1,8 @@
+"""Model zoo: the 10 assigned architectures as composable JAX stacks."""
+
+from .model import Model, build_model
+from .param import (ParamDef, ShardingRules, count_params, init_tree,
+                    shape_tree, spec_tree)
+
+__all__ = ["Model", "ParamDef", "ShardingRules", "build_model",
+           "count_params", "init_tree", "shape_tree", "spec_tree"]

@@ -1,0 +1,226 @@
+"""Attention: chunked flash attention (training/prefill) + cached decode.
+
+Flash attention is implemented as a lax.scan over KV blocks with an online
+softmax (running max / normalizer / accumulator in f32), so the S x S score
+matrix is never materialized - mandatory at 32k prefill. Masks (causal /
+sliding-window / full) are computed from position arithmetic inside each
+block; `window` may be a *traced* scalar so heterogeneous stacks (gemma3's
+5:1 local:global pattern) scan a per-layer window through one compiled body.
+
+GQA is computed in grouped form (B, S, Hkv, G, D) without materializing
+repeated KV heads. KV heads shard over the model axis when divisible;
+otherwise they replicate (e.g. qwen2.5's kv=2 on a 16-way TP axis) - the
+ShardingRules handle this automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef
+from .layers import cast
+from .sharding_ctx import axis_size, hint
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+DEFAULT_BLOCK_KV = 1024
+
+
+def attn_defs(d: int, n_heads: int, n_kv: int, d_head: int, layers: int,
+              qkv_bias: bool = False, dtype=jnp.float32, prefix_ok=True):
+    defs = {
+        "wq": ParamDef((layers, d, n_heads, d_head),
+                       ("layers", "embed", "heads", None), dtype),
+        "wk": ParamDef((layers, d, n_kv, d_head),
+                       ("layers", "embed", "kv_heads", None), dtype),
+        "wv": ParamDef((layers, d, n_kv, d_head),
+                       ("layers", "embed", "kv_heads", None), dtype),
+        "wo": ParamDef((layers, n_heads, d_head, d),
+                       ("layers", "heads", None, "embed"), dtype),
+    }
+    if qkv_bias:
+        defs["bq"] = ParamDef((layers, n_heads, d_head),
+                              ("layers", "heads", None), dtype, init="zeros")
+        defs["bk"] = ParamDef((layers, n_kv, d_head),
+                              ("layers", "kv_heads", None), dtype,
+                              init="zeros")
+        defs["bv"] = ParamDef((layers, n_kv, d_head),
+                              ("layers", "kv_heads", None), dtype,
+                              init="zeros")
+    return defs
+
+
+def qkv_proj(p, x):
+    """x (B,S,d) -> q (B,S,Hq,D), k,v (B,S,Hkv,D)."""
+    q = jnp.einsum("bsd,dhe->bshe", x, cast(p["wq"], x.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", x, cast(p["wk"], x.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", x, cast(p["wv"], x.dtype))
+    if "bq" in p:
+        q = q + cast(p["bq"], x.dtype)
+        k = k + cast(p["bk"], x.dtype)
+        v = v + cast(p["bv"], x.dtype)
+    return q, k, v
+
+
+def out_proj(p, o):
+    return jnp.einsum("bshe,hed->bsd", o, cast(p["wo"], o.dtype))
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True,
+                    window: Optional[jnp.ndarray] = None,
+                    q_offset: int = 0,
+                    block_kv: int = DEFAULT_BLOCK_KV,
+                    remat_blocks: bool = True) -> jnp.ndarray:
+    """Online-softmax attention over KV blocks.
+
+    q: (B,Sq,Hq,D); k,v: (B,Skv,Hkv,D); Hq % Hkv == 0.
+    window: optional traced scalar - attend only to kv in
+    (q_pos - window, q_pos]; None = unbounded (plain causal/full).
+
+    GQA note: KV heads are repeated to Hq before the einsums. Under GSPMD
+    this keeps the head axis sharding unambiguous (q heads shard over the
+    TP axis; the repeat of replicated KV is a local slice, no collective),
+    where the grouped (B,S,Hkv,G,D) formulation lets the partitioner pick
+    pathological shardings of the (Hkv,G) split.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    if hkv != hq:
+        k = jnp.repeat(k, hq // hkv, axis=2)
+        v = jnp.repeat(v, hq // hkv, axis=2)
+    scale = 1.0 / (d ** 0.5)
+
+    # Anchor shardings: scan carries/xs otherwise risk whole-subgraph
+    # replication by the partitioner (see sharding_ctx.py). When the head
+    # count does not divide the TP axis (granite 24H, gemma3 4H, whisper
+    # 12H, qwen2-vl 28H on a 16-way axis) heads would replicate - shard
+    # the q SEQUENCE over "model" instead (flash attention is
+    # embarrassingly parallel over q blocks); KV stays replicated.
+    heads_sharded = hq % axis_size("heads") == 0
+    if heads_sharded:
+        q_axes = ("batch", "seq", "heads", None)
+        c_axes = ("batch", "heads", "seq")
+    else:
+        q_axes = ("batch", "attn_q_seq", None, None)
+        c_axes = ("batch", None, "attn_q_seq")
+    q = hint(q, *q_axes)
+    k = hint(k, "batch", "seq", "heads" if heads_sharded else None, None)
+    v = hint(v, "batch", "seq", "heads" if heads_sharded else None, None)
+
+    bk = min(block_kv, skv)
+    pad = (-skv) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = (skv + pad) // bk
+    kb = k.reshape(b, nb, bk, hq, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, bk, hq, d).transpose(1, 0, 2, 3, 4)
+    kb = hint(kb, None, "batch", None,
+              "heads" if heads_sharded else None, None)
+    vb = hint(vb, None, "batch", None,
+              "heads" if heads_sharded else None, None)
+
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kblk, vblk, idx = inputs
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        kv_pos = idx * bk + jnp.arange(bk)
+        valid = kv_pos[None, :] < skv  # padded tail
+        mask = jnp.broadcast_to(valid, (sq, bk))
+        if causal:
+            mask = mask & (kv_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            mask = mask & (kv_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p.astype(vblk.dtype), vblk,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = hint(jnp.full((b, hq, sq), NEG_INF, jnp.float32), *c_axes)
+    l0 = hint(jnp.zeros((b, hq, sq), jnp.float32), *c_axes)
+    acc0 = hint(jnp.zeros((b, hq, sq, d), jnp.float32), *c_axes, None)
+    # Flash-attention backward: rematerialize the per-block probability
+    # matrices instead of letting autodiff stack them as (nb,B,H,Sq,bk)
+    # f32 scan residuals - the classic FA recompute trade (2 extra block
+    # matmuls in bwd for an O(S*S) -> O(S) memory/traffic cut). See
+    # EXPERIMENTS.md SSPerf iteration A.
+    scan_body = jax.checkpoint(body) if remat_blocks else body
+    (m, l, acc), _ = jax.lax.scan(
+        scan_body, (m0, l0, acc0), (kb, vb, jnp.arange(nb)))
+    out = acc / jnp.maximum(l, 1e-20)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode (one new token against a seq_len cache)
+# ---------------------------------------------------------------------------
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, pos: jnp.ndarray,
+                     window: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """q (B,1,Hq,D); caches (B,Skv,Hkv,D); pos (B,) = index of the new token
+    (entries kv_pos <= pos are valid). Single-pass softmax: the (B,Hq,Skv)
+    score tensor is linear in Skv, which is the whole point of decode.
+
+    GQA stays in GROUPED form here - repeating KV to Hq would read the
+    cache Hq/Hkv (up to 16x) wider (SSPerf hillclimb 3). Decode shards the
+    cache on kv_seq (not heads), so the grouped split is sharding-safe,
+    unlike the training path (see flash_attention's GQA note)."""
+    b, _, hq, d = q.shape
+    skv, hkv = k_cache.shape[1], k_cache.shape[2]
+    g = hq // hkv
+    qg = q[:, 0].reshape(b, hkv, g, d)
+    scale = 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    # Scores must FOLLOW the cache's seq sharding: if kv_seq is sharded,
+    # sharding heads here instead makes the PV einsum all-gather the whole
+    # V cache (SSPerf hillclimb 2, zamba2 long_500k: 5.4 GB x9 gathers).
+    if axis_size("kv_seq") > 1:
+        s = hint(s, "batch", None, None, "kv_seq")
+    else:
+        s = hint(s, "batch", "kv_heads", None, "kv_seq")
+    kv_pos = jnp.arange(skv)
+    mask = kv_pos[None, :] <= pos[:, None]  # (B,Skv)
+    if window is not None:
+        mask = mask & (kv_pos[None, :] > (pos[:, None] - window))
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                   preferred_element_type=jnp.float32)
+    return o.reshape(b, 1, hq, d).astype(q.dtype)
+
+
+def update_cache(k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                 k_new: jnp.ndarray, v_new: jnp.ndarray,
+                 pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Insert one token's K/V at per-sequence positions. caches
+    (B,Skv,Hkv,D); k_new/v_new (B,1,Hkv,D); pos (B,).
+
+    Implemented as a masked elementwise write, NOT a scatter: GSPMD
+    cannot partition a scatter into a seq-sharded cache and falls back to
+    full rematerialization (replicate + re-shard = gathering the whole
+    cache per token). The where-write keeps every shard local - each
+    shard compares its own positions against `pos` (SSPerf hillclimb 2)."""
+    skv = k_cache.shape[1]
+    sel = (jnp.arange(skv)[None, :] == pos[:, None])[..., None, None]
+    k_cache = jnp.where(sel, k_new.astype(k_cache.dtype), k_cache)
+    v_cache = jnp.where(sel, v_new.astype(v_cache.dtype), v_cache)
+    return k_cache, v_cache

@@ -1,0 +1,146 @@
+"""Common layers: RMSNorm, RoPE/M-RoPE, SwiGLU MLP, embeddings.
+
+Pure functions over ParamDef-described pytrees; compute dtype is bf16 with
+f32 for normalization statistics and softmax accumulators (MaxText-style
+mixed precision). Weights stay in their stored dtype until cast at use.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .param import ParamDef
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+def cast(x, dtype=COMPUTE_DTYPE):
+    return x.astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_def(d: int, layers: Optional[int] = None) -> ParamDef:
+    if layers is None:
+        return ParamDef((d,), (None,), init="ones")
+    return ParamDef((layers, d), ("layers", None), init="ones")
+
+
+def rmsnorm(w, x, eps: float = 1e-6):
+    # f32 statistics + f32 normalize, cast at the output. A bf16-rsqrt
+    # variant was tried (SSPerf iteration D) and REFUTED: no traffic win
+    # (the CPU backend promotes bf16 chains regardless; on TPU the norm
+    # fuses into its neighbours) and a 20x decode-parity regression from
+    # per-layer scale quantization. Keep f32.
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return out.astype(x.dtype) * cast(w, x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta) -> jnp.ndarray:
+    """x (B,S,H,D), positions (B,S) int -> rotated x. `theta` may be a traced
+    scalar (gemma3 scans per-layer theta through the stack)."""
+    d = x.shape[-1]
+    half = d // 2
+    log_theta = jnp.log(jnp.asarray(theta, jnp.float32))
+    freqs = jnp.exp(-log_theta * (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def mrope(x: jnp.ndarray, positions: jnp.ndarray, theta: float,
+          sections: Tuple[int, ...]) -> jnp.ndarray:
+    """Multimodal RoPE (Qwen2-VL): positions (3,B,S) for (t,h,w); frequency
+    bands are split across the three position streams per `sections`
+    (which sum to head_dim/2)."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angs = []
+    lo = 0
+    for s_idx, width in enumerate(sections):
+        f = freqs[lo:lo + width]
+        p = positions[s_idx].astype(jnp.float32)  # (B,S)
+        angs.append(p[..., None] * f)
+        lo += width
+    ang = jnp.concatenate(angs, axis=-1)  # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n: int, d: int) -> jnp.ndarray:
+    """Whisper-style sinusoidal absolute position embeddings (n, d)."""
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) *
+                    jnp.arange(half, dtype=jnp.float32) / max(half - 1, 1))
+    ang = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_defs(d: int, ff: int, layers: int, dtype=jnp.float32):
+    lax_ = ("layers", "embed", "ffn")
+    return {
+        "w1": ParamDef((layers, d, ff), lax_, dtype),
+        "w3": ParamDef((layers, d, ff), lax_, dtype),
+        "w2": ParamDef((layers, ff, d), ("layers", "ffn", "embed"), dtype),
+    }
+
+
+def _act(name: str):
+    return jax.nn.gelu if name == "gelu" else jax.nn.silu
+
+
+def mlp(p, x, act: str = "silu"):
+    h = _act(act)(x @ cast(p["w1"], x.dtype)) * (x @ cast(p["w3"], x.dtype))
+    return h @ cast(p["w2"], x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+
+def embed_defs(vocab: int, d: int, tie: bool, dtype=jnp.float32):
+    defs = {"embed": ParamDef((vocab, d), ("vocab", "embed"), dtype,
+                              scale=1.0)}
+    if not tie:
+        defs["unembed"] = ParamDef((d, vocab), ("embed", "vocab"), dtype)
+    return defs
+
+
+def embed(p, tokens: jnp.ndarray, dtype=COMPUTE_DTYPE) -> jnp.ndarray:
+    return cast(p["embed"], dtype)[tokens]
+
+
+def unembed(p, x: jnp.ndarray) -> jnp.ndarray:
+    if "unembed" in p:
+        return x @ cast(p["unembed"], x.dtype)
+    return x @ cast(p["embed"], x.dtype).T

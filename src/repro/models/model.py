@@ -1,0 +1,89 @@
+"""Public model API: build_model(cfg) -> Model with init / forward /
+prefill / decode plus parameter-count accounting used by the roofline
+(MODEL_FLOPS = 6*N*D, 2*N_active per decoded token).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from . import transformer
+from .param import (ParamDef, ShardingRules, count_params, init_tree,
+                    map_tree, shape_tree, spec_tree)
+
+
+@dataclasses.dataclass
+class Model:
+    cfg: ArchConfig
+
+    # -- parameters -----------------------------------------------------------
+
+    def param_defs(self):
+        return transformer.model_defs(self.cfg)
+
+    def init(self, key: jax.Array):
+        return init_tree(self.param_defs(), key)
+
+    def param_shapes(self, dtype=None):
+        defs = self.param_defs()
+        if dtype is not None:
+            import dataclasses as _dc
+            defs = map_tree(lambda d: _dc.replace(d, dtype=dtype), defs)
+        return shape_tree(defs)
+
+    def param_specs(self, rules: ShardingRules, mesh_shape: Dict[str, int]):
+        return spec_tree(self.param_defs(), rules, mesh_shape)
+
+    def n_params(self) -> int:
+        return count_params(self.param_defs())
+
+    def n_active_params(self) -> int:
+        """Active parameters per token (MoE: top_k of E experts)."""
+        cfg = self.cfg
+        if cfg.moe is None:
+            return self.n_params()
+        defs = self.param_defs()
+        moe_total = count_params(defs["layers"]["moe"]) - int(
+            np.prod(defs["layers"]["moe"]["router"].shape))
+        from .moe import padded_experts
+        e_pad = padded_experts(cfg.moe)
+        active = moe_total * cfg.moe.top_k / e_pad
+        return int(self.n_params() - moe_total + active)
+
+    # -- compute --------------------------------------------------------------
+
+    def forward(self, params, batch, mesh=None, remat: bool = False):
+        return transformer.forward(params, self.cfg, batch, mesh=mesh,
+                                   remat=remat)
+
+    def prefill(self, params, batch, skv: Optional[int] = None, mesh=None):
+        return transformer.prefill(params, self.cfg, batch, skv=skv,
+                                   mesh=mesh)
+
+    def decode_step(self, params, caches, batch, mesh=None):
+        return transformer.decode_step(params, self.cfg, caches, batch,
+                                       mesh=mesh)
+
+    def cache_defs(self, batch: int, skv: int):
+        return transformer.cache_defs(self.cfg, batch, skv)
+
+    def cache_shapes(self, batch: int, skv: int):
+        return shape_tree(self.cache_defs(batch, skv))
+
+    def cache_specs(self, batch: int, skv: int, rules: ShardingRules,
+                    mesh_shape: Dict[str, int]):
+        return spec_tree(self.cache_defs(batch, skv), rules, mesh_shape)
+
+    def init_cache(self, batch: int, skv: int):
+        defs = self.cache_defs(batch, skv)
+        return map_tree(lambda d: jnp.zeros(d.shape, d.dtype), defs)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

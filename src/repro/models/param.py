@@ -1,0 +1,184 @@
+"""Parameter definition trees: one source of truth for shapes, dtypes,
+logical sharding axes, and initializers.
+
+A model's parameters are a nested dict of ParamDef. From it we derive:
+  * shape_tree()  -> jax.ShapeDtypeStruct tree (dry-run lowering, no alloc)
+  * init_tree()   -> materialized arrays (smoke tests / real training)
+  * spec_tree()   -> PartitionSpec tree via ShardingRules (logical->mesh),
+                     with automatic divisibility fallback (e.g. 2 GQA KV
+                     heads cannot shard over a 16-way model axis -> None).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis name per dim (or None)
+    dtype: Any = jnp.float32
+    init: str = "normal"  # normal | zeros | ones | scaled
+    scale: Optional[float] = None  # stddev override for "normal"/"scaled"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+Tree = Dict[str, Any]  # nested dict of ParamDef / subtrees
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def map_tree(fn: Callable[[ParamDef], Any], tree: Tree) -> Tree:
+    if not isinstance(tree, dict):
+        return fn(tree)
+    return {k: map_tree(fn, v) for k, v in tree.items()}
+
+
+def shape_tree(tree: Tree) -> Tree:
+    return map_tree(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), tree)
+
+
+def count_params(tree: Tree) -> int:
+    total = 0
+
+    def add(d: ParamDef):
+        nonlocal total
+        total += int(np.prod(d.shape))
+
+    map_tree(add, tree)
+    return total
+
+
+def init_tree(tree: Tree, key: jax.Array) -> Tree:
+    """Materialize parameters (used by smoke tests and real training)."""
+    leaves = []
+
+    def collect(d: ParamDef):
+        leaves.append(d)
+        return len(leaves) - 1
+
+    indexed = map_tree(collect, tree)
+    keys = jax.random.split(key, max(len(leaves), 1))
+
+    def make(i_def):
+        d = leaves[i_def]
+        k = keys[i_def]
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale if d.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(d.dtype)
+
+    return map_tree(lambda i: make(i), indexed)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules: logical axis -> mesh axes
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical->physical mapping. Tuples are mesh axis names (joined)."""
+
+    rules: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+        ("batch", ("pod", "data")),
+        ("embed", ("data",)),        # FSDP shard of weight embed dims
+        ("embed_pod", ("pod", "data")),  # multi-pod FSDP variant
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("ffn", ("model",)),
+        ("vocab", ("model",)),
+        ("expert", ("model",)),
+        ("seq", ()),                  # sequence parallelism off by default
+        ("attn_q_seq", ("model",)),   # q-seq sharding when heads don't
+                                      # divide the TP axis (SSPerf iter B)
+        ("kv_seq", ()),               # decode-cache sequence sharding
+        ("layers", ()),
+        ("conv_dim", ("model",)),
+        ("ssm_heads", ("model",)),
+    )
+
+    def lookup(self) -> Dict[str, Tuple[str, ...]]:
+        return dict(self.rules)
+
+    def with_overrides(self, **kw) -> "ShardingRules":
+        d = self.lookup()
+        for k, v in kw.items():
+            d[k] = tuple(v) if v else ()
+        return ShardingRules(tuple(sorted(d.items())))
+
+
+def _axes_size(mesh_shape: Dict[str, int], axes: Tuple[str, ...]) -> int:
+    size = 1
+    for a in axes:
+        size *= mesh_shape.get(a, 1)
+    return size
+
+
+def spec_for(d: ParamDef, rules: ShardingRules,
+             mesh_shape: Dict[str, int]) -> P:
+    """PartitionSpec for one param: apply rules with divisibility checks and
+    never reuse a mesh axis across dims (GSPMD requirement)."""
+    table = rules.lookup()
+    used: set = set()
+    parts = []
+    for dim, logical in zip(d.shape, d.axes):
+        if logical is None:
+            parts.append(None)
+            continue
+        axes = tuple(a for a in table.get(logical, ())
+                     if a in mesh_shape and a not in used)
+        if not axes or dim % _axes_size(mesh_shape, axes) != 0:
+            # try prefixes (e.g. ("pod","data") -> ("pod",)) before giving up
+            ok = ()
+            for cut in range(len(axes) - 1, 0, -1):
+                sub = axes[:cut]
+                if dim % _axes_size(mesh_shape, sub) == 0:
+                    ok = sub
+                    break
+            axes = ok
+        if not axes:
+            parts.append(None)
+        else:
+            used.update(axes)
+            parts.append(axes if len(axes) > 1 else axes[0])
+    return P(*parts)
+
+
+def spec_tree(tree: Tree, rules: ShardingRules,
+              mesh_shape: Dict[str, int]) -> Tree:
+    return map_tree(lambda d: spec_for(d, rules, mesh_shape), tree)
+
+
+def logical_batch_spec(axes: Tuple[Optional[str], ...], rules: ShardingRules,
+                       mesh_shape: Dict[str, int],
+                       shape: Optional[Tuple[int, ...]] = None) -> P:
+    """Spec for activations/inputs given logical axes (+ divisibility)."""
+    d = ParamDef(tuple(shape) if shape else tuple(1 for _ in axes), axes)
+    if shape is None:
+        # without shapes we cannot check divisibility; map directly
+        table = rules.lookup()
+        used: set = set()
+        parts = []
+        for logical in axes:
+            ax = tuple(a for a in table.get(logical, ())
+                       if a in mesh_shape and a not in used) if logical else ()
+            used.update(ax)
+            parts.append(ax if len(ax) > 1 else (ax[0] if ax else None))
+        return P(*parts)
+    return spec_for(d, rules, mesh_shape)

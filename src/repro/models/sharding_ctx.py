@@ -1,0 +1,67 @@
+"""Ambient activation-sharding hints.
+
+GSPMD propagates parameter shardings well, but scan carries (flash
+attention's online-softmax state, decode caches, the layer residual
+stream) need explicit anchors or the partitioner may replicate whole
+subgraphs (observed: flash attention running with the full global batch
+per device). `hint(x, *logical_axes)` applies
+jax.lax.with_sharding_constraint using the ambient logical->mesh mapping;
+outside a mesh context it is a no-op, so smoke tests and single-device
+runs are unaffected.
+
+The context is set at trace time by the launcher (dryrun/train) via
+`axis_rules(rules, mesh_shape)`.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from .param import ParamDef, ShardingRules, spec_for
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_axis_rules", default=None)
+
+
+@contextlib.contextmanager
+def axis_rules(rules: ShardingRules, mesh_shape: Dict[str, int]):
+    token = _CTX.set((rules, dict(mesh_shape)))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def axis_size(logical: str) -> int:
+    """Product of mesh-axis sizes the logical axis maps to (1 if no ctx)."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return 1
+    rules, mesh_shape = ctx
+    size = 1
+    for a in rules.lookup().get(logical, ()):
+        size *= mesh_shape.get(a, 1)
+    return size
+
+
+def hint(x, *axes: Optional[str]):
+    """Constrain activation x to the logical axes (None = replicated dim).
+    Applies the same divisibility fallbacks as parameter sharding."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    rules, mesh_shape = ctx
+    if len(axes) != x.ndim:
+        raise ValueError(f"hint axes {axes} vs shape {x.shape}")
+    spec = spec_for(ParamDef(tuple(x.shape), tuple(axes)), rules, mesh_shape)
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def hint_tree(tree, axes_fn):
+    """Apply hints across a pytree; axes_fn(leaf) -> logical axes."""
+    return jax.tree.map(lambda l: hint(l, *axes_fn(l)), tree)

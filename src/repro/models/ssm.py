@@ -1,0 +1,274 @@
+"""Mamba2 block: chunked SSD (state-space duality) + single-step decode.
+
+The SSD dual form (arXiv:2405.21060) splits the sequence into chunks of
+length Q: within a chunk the recurrence is computed as a masked quadratic
+attention-like product (dense matmuls - MXU-friendly); across chunks a
+linear scan propagates the (H, P, N) state. Training/prefill use the
+chunked form; decode is the O(1) recurrent update.
+
+Projections are separate matmuls (wz/wx/wB/wC/wdt) rather than one fused
+in_proj: this keeps sharding clean (d_inner shards over the model axis;
+the small B/C/dt projections replicate) and costs nothing - XLA fuses them.
+
+Causal depthwise conv (width 4) is computed as 4 shifted adds; its state
+(last W-1 inputs) is carried in the decode cache.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, SSMConfig
+from .layers import cast, rmsnorm
+from .param import ParamDef
+from .sharding_ctx import hint
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    n_groups: int
+    d_state: int
+    gn: int
+    conv_w: int
+
+
+def ssm_dims(cfg: ArchConfig) -> SSMDims:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    return SSMDims(d_inner, n_heads, s.head_dim, s.n_groups, s.d_state,
+                   s.n_groups * s.d_state, s.conv_width)
+
+
+def ssm_defs(cfg: ArchConfig, layers: int, dtype=jnp.float32):
+    d = cfg.d_model
+    dims = ssm_dims(cfg)
+    di, h, gn, w = dims.d_inner, dims.n_heads, dims.gn, dims.conv_w
+    lef = ("layers", "embed", "ffn")
+    return {
+        "wz": ParamDef((layers, d, di), lef, dtype),
+        "wx": ParamDef((layers, d, di), lef, dtype),
+        "wB": ParamDef((layers, d, gn), ("layers", "embed", None), dtype),
+        "wC": ParamDef((layers, d, gn), ("layers", "embed", None), dtype),
+        "wdt": ParamDef((layers, d, h), ("layers", "embed", "ssm_heads"),
+                        dtype),
+        "dt_bias": ParamDef((layers, h), ("layers", "ssm_heads"), dtype,
+                            init="zeros"),
+        "A_log": ParamDef((layers, h), ("layers", "ssm_heads"), dtype,
+                          init="zeros"),
+        "Dskip": ParamDef((layers, h), ("layers", "ssm_heads"), dtype,
+                          init="ones"),
+        "conv_x": ParamDef((layers, w, di), ("layers", None, "ffn"), dtype,
+                           scale=0.5),
+        "conv_B": ParamDef((layers, w, gn), ("layers", None, None), dtype,
+                           scale=0.5),
+        "conv_C": ParamDef((layers, w, gn), ("layers", None, None), dtype,
+                           scale=0.5),
+        "norm": ParamDef((layers, di), ("layers", "ffn"), dtype,
+                         init="ones"),
+        "wo": ParamDef((layers, di, d), ("layers", "ffn", "embed"), dtype),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,C), w (W,C). If `state` (B,W-1,C) is
+    given it provides left context (prefill continuation)."""
+    width = w.shape[0]
+    if state is None:
+        ctx = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        ctx = state.astype(x.dtype)
+    full = jnp.concatenate([ctx, x], axis=1)
+    out = jnp.zeros_like(x)
+    s = x.shape[1]
+    for i in range(width):
+        out = out + full[:, i:i + s] * cast(w[i], x.dtype)
+    return out
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, dA: jnp.ndarray,
+                bm: jnp.ndarray, cm: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD dual form.
+
+    x (B,S,H,P), dt/dA (B,S,H) f32, bm/cm (B,S,G,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    b, s_orig, h, p = x.shape
+    g, n = bm.shape[2], bm.shape[3]
+    q = min(chunk, s_orig)
+    pad = (-s_orig) % q
+    if pad:
+        # Zero-padding is exact: padded steps have dt=0 => no state update,
+        # zero decay contribution, zero output rows (sliced off below).
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        bm = jnp.pad(bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cm = jnp.pad(cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    s = s_orig + pad
+    nc = s // q
+    rep = h // g
+
+    def c(t, extra=()):  # chunk reshape (B,S,...) -> (B,nc,Q,...)
+        return t.reshape((b, nc, q) + t.shape[2:])
+
+    xc = c(x)
+    dtc = c(dt)
+    dac = c(dA)
+    bc = jnp.repeat(c(bm), rep, axis=3)  # (B,nc,Q,H,N)
+    cc = jnp.repeat(c(cm), rep, axis=3)
+
+    a_cs = jnp.cumsum(dac, axis=2)  # (B,nc,Q,H) cumulative log-decay
+
+    # --- intra-chunk (quadratic within Q) ---------------------------------
+    # scores[i,j] = (C_i . B_j) * exp(a_i - a_j) * dt_j   for i >= j
+    cb = jnp.einsum("bcqhn,bckhn->bcqkh", cc, bc,
+                    preferred_element_type=jnp.float32)
+    decay = jnp.exp(a_cs[:, :, :, None, :] - a_cs[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    scores = cb * decay * dtc[:, :, None, :, :]
+    scores = jnp.where(tri[None, None, :, :, None], scores, 0.0)
+    y_intra = jnp.einsum("bcqkh,bckhp->bcqhp", scores.astype(x.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # --- chunk states ------------------------------------------------------
+    # state_c = sum_j exp(a_last - a_j) * dt_j * B_j (x) x_j
+    w = jnp.exp(a_cs[:, :, -1:, :] - a_cs) * dtc  # (B,nc,Q,H)
+    states = jnp.einsum("bckh,bckhn,bckhp->bchpn", w.astype(x.dtype), bc, xc,
+                        preferred_element_type=jnp.float32)
+
+    # --- inter-chunk linear scan -------------------------------------------
+    chunk_decay = jnp.exp(a_cs[:, :, -1, :])  # (B,nc,H)
+
+    def body(s_prev, inp):
+        st, dec = inp
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    init = (jnp.zeros((b, h, p, n), jnp.float32)
+            if initial_state is None else initial_state.astype(jnp.float32))
+    final, prev_states = jax.lax.scan(
+        body, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqh,bcqhn,bchpn->bcqhp",
+                         jnp.exp(a_cs).astype(x.dtype), cc,
+                         prev_states.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+    y = (y_intra + y_inter).reshape(b, s, h, p)[:, :s_orig]
+    return y.astype(x.dtype), final
+
+
+def ssm_block(p, x: jnp.ndarray, cfg: ArchConfig,
+              cache: Optional[dict] = None, pos=None,
+              return_cache: bool = False):
+    """Full Mamba2 block. x (B,S,d).
+
+    Training: cache=None. Prefill: return_cache=True -> returns
+    (out, cache). Decode: cache given, S==1 -> recurrent update."""
+    dims = ssm_dims(cfg)
+    b, s, d = x.shape
+    decode = cache is not None and s == 1 and not return_cache
+
+    x = hint(x, "batch", "seq", None)
+    z = x @ cast(p["wz"], x.dtype)
+    xin = hint(x @ cast(p["wx"], x.dtype), "batch", "seq", "ffn")
+    bproj = x @ cast(p["wB"], x.dtype)
+    cproj = x @ cast(p["wC"], x.dtype)
+    dt = (x @ cast(p["wdt"], x.dtype)).astype(jnp.float32)
+
+    if decode:
+        new_cache = {}
+        window_x = jnp.concatenate([cache["conv_x"].astype(x.dtype), xin], 1)
+        window_b = jnp.concatenate([cache["conv_B"].astype(x.dtype), bproj],
+                                   1)
+        window_c = jnp.concatenate([cache["conv_C"].astype(x.dtype), cproj],
+                                   1)
+        new_cache["conv_x"] = window_x[:, 1:]
+        new_cache["conv_B"] = window_b[:, 1:]
+        new_cache["conv_C"] = window_c[:, 1:]
+        xin = jnp.einsum("bwc,wc->bc", window_x, cast(p["conv_x"], x.dtype))
+        bproj = jnp.einsum("bwc,wc->bc", window_b, cast(p["conv_B"], x.dtype))
+        cproj = jnp.einsum("bwc,wc->bc", window_c, cast(p["conv_C"], x.dtype))
+        xin, bproj, cproj = (jax.nn.silu(t) for t in (xin, bproj, cproj))
+
+        dtv = jax.nn.softplus(dt[:, 0] + p["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))  # (H,)
+        da = jnp.exp(dtv * a)  # (B,H)
+        xh = xin.reshape(b, dims.n_heads, dims.head_dim)
+        bh = jnp.repeat(bproj.reshape(b, dims.n_groups, dims.d_state),
+                        dims.n_heads // dims.n_groups, 1)
+        ch = jnp.repeat(cproj.reshape(b, dims.n_groups, dims.d_state),
+                        dims.n_heads // dims.n_groups, 1)
+        state = hint(cache["state"].astype(jnp.float32),
+                     "batch", "ssm_heads", None, None)
+        state = state * da[:, :, None, None] + jnp.einsum(
+            "bh,bhn,bhp->bhpn", dtv, bh.astype(jnp.float32),
+            xh.astype(jnp.float32))
+        y = jnp.einsum("bhn,bhpn->bhp", ch.astype(jnp.float32), state)
+        y = y + p["Dskip"].astype(jnp.float32)[None, :, None] \
+            * xh.astype(jnp.float32)
+        y = y.reshape(b, 1, dims.d_inner).astype(x.dtype)
+        new_cache["state"] = state
+        z = z.reshape(b, 1, dims.d_inner)
+    else:
+        conv_state = None
+        xin_raw, b_raw, c_raw = xin, bproj, cproj
+        xin = jax.nn.silu(_causal_conv(xin, p["conv_x"]))
+        bproj = jax.nn.silu(_causal_conv(bproj, p["conv_B"]))
+        cproj = jax.nn.silu(_causal_conv(cproj, p["conv_C"]))
+        dtv = jax.nn.softplus(dt + p["dt_bias"].astype(jnp.float32))
+        a = -jnp.exp(p["A_log"].astype(jnp.float32))
+        da = dtv * a  # (B,S,H) log-decay
+        xh = xin.reshape(b, s, dims.n_heads, dims.head_dim)
+        bh = bproj.reshape(b, s, dims.n_groups, dims.d_state)
+        ch = cproj.reshape(b, s, dims.n_groups, dims.d_state)
+        init_state = cache["state"] if cache is not None else None
+        y, final_state = ssd_chunked(xh, dtv, da, bh, ch, cfg.ssm.chunk,
+                                     init_state)
+        y = y + p["Dskip"].astype(x.dtype)[None, None, :, None] * xh
+        y = y.reshape(b, s, dims.d_inner)
+        if return_cache:
+            w = dims.conv_w
+            new_cache = {
+                "conv_x": xin_raw[:, -(w - 1):],
+                "conv_B": b_raw[:, -(w - 1):],
+                "conv_C": c_raw[:, -(w - 1):],
+                "state": final_state,
+            }
+
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = y @ cast(p["wo"], x.dtype)
+    if decode or return_cache:
+        return out, new_cache
+    return out
+
+
+def ssm_cache_defs(cfg: ArchConfig, layers: int, batch: int,
+                   dtype=jnp.bfloat16):
+    """ShapeDtypeStruct-compatible defs for the decode cache."""
+    dims = ssm_dims(cfg)
+    w = dims.conv_w
+    return {
+        "conv_x": ParamDef((layers, batch, w - 1, dims.d_inner),
+                           ("layers", "batch", None, "ffn"), dtype,
+                           init="zeros"),
+        "conv_B": ParamDef((layers, batch, w - 1, dims.gn),
+                           ("layers", "batch", None, None), dtype,
+                           init="zeros"),
+        "conv_C": ParamDef((layers, batch, w - 1, dims.gn),
+                           ("layers", "batch", None, None), dtype,
+                           init="zeros"),
+        "state": ParamDef((layers, batch, dims.n_heads, dims.head_dim,
+                           dims.d_state),
+                          ("layers", "batch", "ssm_heads", None, None),
+                          jnp.float32, init="zeros"),
+    }

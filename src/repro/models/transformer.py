@@ -1,0 +1,661 @@
+"""Family stacks: dense / MoE / VLM decoders, SSM (Mamba2), hybrid
+(Zamba2), and encoder-decoder (Whisper). One scan-over-layers body per
+family; heterogeneous layer patterns (gemma3's 5:1 local:global windows,
+zamba2's shared block) are expressed as *scanned per-layer scalars* so a
+single compiled body serves the whole stack.
+
+Public entry points (used by model.py):
+  model_defs(cfg)                          parameter tree
+  forward(params, cfg, batch, ...)         train-mode logits (B,S,V)
+  prefill(params, cfg, batch, ...)         (last-token logits, caches)
+  decode_step(params, cfg, caches, batch)  (logits, new caches)
+  cache_defs(cfg, batch, skv)              decode-cache ParamDef tree
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (COMPUTE_DTYPE, cast, embed, embed_defs, mlp, mlp_defs,
+                     mrope, rmsnorm, rmsnorm_def, rope, sinusoidal_positions,
+                     unembed)
+from .param import ParamDef
+from .sharding_ctx import hint
+
+Tree = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# Parameter trees
+# ---------------------------------------------------------------------------
+
+
+def _decoder_layer_defs(cfg: ArchConfig, layers: int) -> Tree:
+    d = cfg.d_model
+    defs: Tree = {
+        "ln1": rmsnorm_def(d, layers),
+        "ln2": rmsnorm_def(d, layers),
+        "attn": attn.attn_defs(d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+                               layers, cfg.qkv_bias),
+    }
+    if cfg.moe is not None:
+        defs["moe"] = moe_mod.moe_defs(cfg, layers)
+    else:
+        defs["mlp"] = mlp_defs(d, cfg.d_ff, layers)
+    return defs
+
+
+def model_defs(cfg: ArchConfig) -> Tree:
+    d = cfg.d_model
+    defs: Tree = embed_defs(cfg.vocab, d, cfg.tie_embeddings)
+    defs["final_norm"] = rmsnorm_def(d)
+
+    if cfg.family == "ssm":
+        defs["layers"] = dict(ssm_mod.ssm_defs(cfg, cfg.n_layers))
+        defs["layers"]["ln"] = rmsnorm_def(d, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        defs["layers"] = dict(ssm_mod.ssm_defs(cfg, cfg.n_layers))
+        defs["layers"]["ln"] = rmsnorm_def(d, cfg.n_layers)
+        defs["shared"] = {
+            "ln1": rmsnorm_def(d), "ln2": rmsnorm_def(d),
+            "attn": attn.attn_defs(d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, 1, cfg.qkv_bias),
+            "mlp": mlp_defs(d, cfg.d_ff, 1),
+        }
+    elif cfg.enc_dec:
+        defs["enc_layers"] = {
+            "ln1": rmsnorm_def(d, cfg.n_enc_layers),
+            "ln2": rmsnorm_def(d, cfg.n_enc_layers),
+            "attn": attn.attn_defs(d, cfg.n_heads, cfg.n_kv_heads,
+                                   cfg.head_dim, cfg.n_enc_layers),
+            "mlp": mlp_defs(d, cfg.d_ff, cfg.n_enc_layers),
+        }
+        defs["enc_norm"] = rmsnorm_def(d)
+        dec = _decoder_layer_defs(cfg, cfg.n_layers)
+        dec["ln3"] = rmsnorm_def(d, cfg.n_layers)
+        dec["cross"] = attn.attn_defs(d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.head_dim, cfg.n_layers)
+        defs["layers"] = dec
+    else:  # dense / moe / vlm decoders
+        defs["layers"] = _decoder_layer_defs(cfg, cfg.n_layers)
+    return defs
+
+
+def cache_defs(cfg: ArchConfig, batch: int, skv: int) -> Tree:
+    """Decode-cache tree (ShapeDtypeStructs via param.shape_tree)."""
+    kv = ("layers", "batch", "kv_seq", "kv_heads", None)
+    hd = cfg.head_dim
+
+    def kv_pair(layers: int, length: int) -> Tree:
+        return {
+            "k": ParamDef((layers, batch, length, cfg.n_kv_heads, hd), kv,
+                          COMPUTE_DTYPE, init="zeros"),
+            "v": ParamDef((layers, batch, length, cfg.n_kv_heads, hd), kv,
+                          COMPUTE_DTYPE, init="zeros"),
+        }
+
+    if cfg.family == "ssm":
+        return {"ssm": ssm_mod.ssm_cache_defs(cfg, cfg.n_layers, batch)}
+    if cfg.family == "hybrid":
+        n_shared = cfg.n_layers // cfg.shared_attn_every
+        return {
+            "ssm": ssm_mod.ssm_cache_defs(cfg, cfg.n_layers, batch),
+            "shared": kv_pair(n_shared, skv),
+        }
+    if cfg.enc_dec:
+        return {
+            "self": kv_pair(cfg.n_layers, skv),
+            "cross": kv_pair(cfg.n_layers, cfg.n_frames),
+        }
+    return {"self": kv_pair(cfg.n_layers, skv)}
+
+
+# ---------------------------------------------------------------------------
+# Per-layer attention windows / rope thetas (gemma3 pattern)
+# ---------------------------------------------------------------------------
+
+
+def layer_windows(cfg: ArchConfig, skv: int) -> Optional[jnp.ndarray]:
+    """(L,) per-layer window, or None when every layer is full-causal.
+    Global layers get window = skv+1 (never binds)."""
+    if not cfg.sliding_window or not cfg.global_every:
+        return None
+    idx = jnp.arange(cfg.n_layers)
+    is_global = (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.where(is_global, skv + 1, cfg.sliding_window)
+
+
+def layer_thetas(cfg: ArchConfig) -> Optional[jnp.ndarray]:
+    if cfg.global_rope_theta is None or not cfg.global_every:
+        return None
+    idx = jnp.arange(cfg.n_layers)
+    is_global = (idx % cfg.global_every) == (cfg.global_every - 1)
+    return jnp.where(is_global, cfg.global_rope_theta, cfg.rope_theta)
+
+
+# ---------------------------------------------------------------------------
+# Shared building blocks
+# ---------------------------------------------------------------------------
+
+
+def _apply_rope(cfg: ArchConfig, q, k, positions, theta):
+    if cfg.rope_kind == "none":
+        return q, k
+    if cfg.rope_kind == "mrope":
+        return (mrope(q, positions, cfg.rope_theta, cfg.mrope_sections),
+                mrope(k, positions, cfg.rope_theta, cfg.mrope_sections))
+    return rope(q, positions, theta), rope(k, positions, theta)
+
+
+def _attn_layer(lp, cfg, x, positions, theta, window, block_kv):
+    x = hint(x, "batch", "seq", None)
+    h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_proj(lp["attn"], h)
+    q, k = _apply_rope(cfg, q, k, positions, theta)
+    o = attn.flash_attention(q, k, v, causal=True, window=window,
+                             block_kv=block_kv)
+    # Saved across the layer-remat boundary (SSPerf iteration E): backward
+    # re-runs norms/projections but NOT the flash scan.
+    o = checkpoint_name(o, "attn_out")
+    return x + attn.out_proj(lp["attn"], o)
+
+
+def _ffn_layer(lp, cfg, x, mesh):
+    x = hint(x, "batch", "seq", None)
+    h = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        y, aux = moe_mod.moe_block(lp["moe"], h, cfg, mesh, cfg.act)
+        return x + y, aux
+    return x + mlp(lp["mlp"], h, cfg.act), jnp.float32(0.0)
+
+
+def _embed_in(params, cfg, batch) -> jnp.ndarray:
+    x = hint(embed(params, batch["tokens"]), "batch", "seq", None)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        b = x.shape[0]
+        bidx = jnp.arange(b)[:, None]
+        x = x.at[bidx, batch["vision_positions"]].set(
+            batch["vision_embeds"].astype(x.dtype))
+    return x
+
+
+def _positions(cfg, batch, b, s):
+    if cfg.rope_kind == "mrope":
+        if "mrope_positions" in batch:
+            return batch["mrope_positions"]
+        base = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        return jnp.broadcast_to(base[None], (3, b, s))
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+
+
+def _maybe_remat(fn, remat):
+    # remat: False | True ("full") | "save_attn" (keep attention outputs
+    # resident across the remat boundary - trades ~B*S*d bf16 per layer
+    # of HBM residency for skipping the flash-scan recompute in backward).
+    if not remat:
+        return fn
+    if remat == "save_attn":
+        policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Train-mode forward (full-sequence logits)
+# ---------------------------------------------------------------------------
+
+
+def forward(params, cfg: ArchConfig, batch, mesh=None, remat: bool = False,
+            block_kv: int = attn.DEFAULT_BLOCK_KV):
+    """Returns (logits (B,S,V), aux_loss scalar)."""
+    if cfg.enc_dec:
+        return _whisper_forward(params, cfg, batch, remat, block_kv)
+    if cfg.family == "ssm":
+        return _ssm_forward(params, cfg, batch, remat)
+    if cfg.family == "hybrid":
+        return _hybrid_forward(params, cfg, batch, remat, block_kv)
+
+    b, s = batch["tokens"].shape
+    x = _embed_in(params, cfg, batch)
+    positions = _positions(cfg, batch, b, s)
+    windows = layer_windows(cfg, s)
+    thetas = layer_thetas(cfg)
+
+    def body(carry, lp_and_sc):
+        x, aux = carry
+        lp, window, theta = lp_and_sc
+        x = _attn_layer(lp, cfg, x, positions, theta, window, block_kv)
+        x, aux_l = _ffn_layer(lp, cfg, x, mesh)
+        return (x, aux + aux_l), None
+
+    L = cfg.n_layers
+    win_xs = windows if windows is not None else jnp.zeros((L,))
+    th_xs = thetas if thetas is not None else \
+        jnp.full((L,), cfg.rope_theta)
+
+    def scan_body(carry, xs):
+        lp, w, th = xs
+        window = w if windows is not None else None
+        return body(carry, (lp, window, th))
+
+    (x, aux), _ = jax.lax.scan(
+        _maybe_remat(scan_body, remat), (x, jnp.float32(0.0)),
+        (params["layers"], win_xs, th_xs))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x), 'batch', 'seq', 'vocab'), aux
+
+
+def _ssm_forward(params, cfg, batch, remat):
+    x = _embed_in(params, cfg, batch)
+
+    def scan_body(x, lp):
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        lp_ssm = {k: v for k, v in lp.items() if k != "ln"}
+        return x + ssm_mod.ssm_block(lp_ssm, h, cfg), None
+
+    x, _ = jax.lax.scan(_maybe_remat(scan_body, remat), x, params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x), 'batch', 'seq', 'vocab'), jnp.float32(0.0)
+
+
+def _shared_block(sp, cfg, x, positions, block_kv, kv_cache=None, pos=None):
+    """Zamba2 weight-tied shared attention+MLP block. Params have a leading
+    length-1 'layers' dim (sliced here). Returns (x, (k,v)) in train/prefill
+    or (x, new_kv) in decode when kv_cache is given."""
+    sl = jax.tree.map(lambda a: a[0], sp)
+    h = rmsnorm(sl["ln1"], x, cfg.norm_eps)
+    q, k, v = attn.qkv_proj(sl["attn"], h)
+    q, k = _apply_rope(cfg, q, k, positions, cfg.rope_theta)
+    if kv_cache is None:
+        o = attn.flash_attention(q, k, v, causal=True, block_kv=block_kv)
+        new_kv = (k, v)
+    else:
+        kc, vc = kv_cache
+        kc, vc = attn.update_cache(kc, vc, k, v, pos)
+        o = attn.decode_attention(q, kc, vc, pos)
+        new_kv = (kc, vc)
+    x = x + attn.out_proj(sl["attn"], o)
+    h2 = rmsnorm(sl["ln2"], x, cfg.norm_eps)
+    x = x + mlp(sl["mlp"], h2, cfg.act)
+    return x, new_kv
+
+
+def _hybrid_forward(params, cfg, batch, remat, block_kv):
+    b, s = batch["tokens"].shape
+    x = _embed_in(params, cfg, batch)
+    positions = _positions(cfg, batch, b, s)
+    per = cfg.shared_attn_every
+    groups = cfg.n_layers // per
+
+    gl = jax.tree.map(
+        lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+
+    def inner(x, lp):
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        lp_ssm = {k: v for k, v in lp.items() if k != "ln"}
+        return x + ssm_mod.ssm_block(lp_ssm, h, cfg), None
+
+    for g in range(groups):
+        lp_g = jax.tree.map(lambda a: a[g], gl)
+        x, _ = jax.lax.scan(_maybe_remat(inner, remat), x, lp_g)
+        x, _ = _shared_block(params["shared"], cfg, x, positions, block_kv)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x), 'batch', 'seq', 'vocab'), jnp.float32(0.0)
+
+
+def _whisper_forward(params, cfg, batch, remat, block_kv):
+    frames = batch["frames"].astype(COMPUTE_DTYPE)  # (B,F,d) stub frontend
+    b, f, _ = frames.shape
+    xe = frames + sinusoidal_positions(f, cfg.d_model)[None].astype(
+        frames.dtype)
+
+    def enc_body(x, lp):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h)
+        o = attn.flash_attention(q, k, v, causal=False, block_kv=block_kv)
+        x = x + attn.out_proj(lp["attn"], o)
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h2, cfg.act), None
+
+    xe, _ = jax.lax.scan(_maybe_remat(enc_body, remat), xe,
+                         params["enc_layers"])
+    enc_out = rmsnorm(params["enc_norm"], xe, cfg.norm_eps)
+
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = embed(params, tokens) + sinusoidal_positions(
+        s, cfg.d_model)[None].astype(COMPUTE_DTYPE)
+
+    def dec_body(carry, lp):
+        x = carry
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h)
+        o = attn.flash_attention(q, k, v, causal=True, block_kv=block_kv)
+        x = x + attn.out_proj(lp["attn"], o)
+        hc = rmsnorm(lp["ln3"], x, cfg.norm_eps)
+        qc, kc, vc = _cross_qkv(lp["cross"], hc, enc_out)
+        oc = attn.flash_attention(qc, kc, vc, causal=False,
+                                  block_kv=block_kv)
+        x = x + attn.out_proj(lp["cross"], oc)
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h2, cfg.act), None
+
+    x, _ = jax.lax.scan(_maybe_remat(dec_body, remat), x, params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x), 'batch', 'seq', 'vocab'), jnp.float32(0.0)
+
+
+def _cross_qkv(p, x_dec, enc_out):
+    q = jnp.einsum("bsd,dhe->bshe", x_dec, cast(p["wq"], x_dec.dtype))
+    k = jnp.einsum("bsd,dhe->bshe", enc_out, cast(p["wk"], enc_out.dtype))
+    v = jnp.einsum("bsd,dhe->bshe", enc_out, cast(p["wv"], enc_out.dtype))
+    if "bq" in p:
+        q = q + cast(p["bq"], x_dec.dtype)
+        k = k + cast(p["bk"], enc_out.dtype)
+        v = v + cast(p["bv"], enc_out.dtype)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Prefill: forward pass that also emits decode caches
+# ---------------------------------------------------------------------------
+
+
+def prefill(params, cfg: ArchConfig, batch, skv: Optional[int] = None,
+            mesh=None, block_kv: int = attn.DEFAULT_BLOCK_KV):
+    """Returns (last-token logits (B,V), caches sized for skv)."""
+    if cfg.enc_dec:
+        return _whisper_prefill(params, cfg, batch, skv, block_kv)
+    if cfg.family == "ssm":
+        return _ssm_prefill(params, cfg, batch)
+    if cfg.family == "hybrid":
+        return _hybrid_prefill(params, cfg, batch, skv, block_kv)
+
+    b, s = batch["tokens"].shape
+    skv = skv or s
+    x = _embed_in(params, cfg, batch)
+    positions = _positions(cfg, batch, b, s)
+    windows = layer_windows(cfg, skv)
+    thetas = layer_thetas(cfg)
+    L = cfg.n_layers
+    win_xs = windows if windows is not None else jnp.zeros((L,))
+    th_xs = thetas if thetas is not None else jnp.full((L,), cfg.rope_theta)
+
+    def scan_body(carry, xs):
+        x, aux = carry
+        lp, w, th = xs
+        window = w if windows is not None else None
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h)
+        q, k = _apply_rope(cfg, q, k, positions, th)
+        o = attn.flash_attention(q, k, v, causal=True, window=window,
+                                 block_kv=block_kv)
+        x = x + attn.out_proj(lp["attn"], o)
+        x, aux_l = _ffn_layer(lp, cfg, x, mesh)
+        kc = _pad_cache(k, skv)
+        vc = _pad_cache(v, skv)
+        return (x, aux + aux_l), {"k": kc, "v": vc}
+
+    (x, _aux), caches = jax.lax.scan(
+        scan_body, (x, jnp.float32(0.0)), (params["layers"], win_xs, th_xs))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = hint(unembed(params, x[:, -1]), 'batch', 'vocab')
+    return logits, {"self": caches}
+
+
+def _pad_cache(k: jnp.ndarray, skv: int) -> jnp.ndarray:
+    s = k.shape[1]
+    if s == skv:
+        return k.astype(COMPUTE_DTYPE)
+    return jnp.pad(k, ((0, 0), (0, skv - s), (0, 0), (0, 0))).astype(
+        COMPUTE_DTYPE)
+
+
+def _ssm_prefill(params, cfg, batch):
+    x = _embed_in(params, cfg, batch)
+
+    def scan_body(x, lp):
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        lp_ssm = {k: v for k, v in lp.items() if k != "ln"}
+        y, cache = ssm_mod.ssm_block(lp_ssm, h, cfg, return_cache=True)
+        return x + y, cache
+
+    x, caches = jax.lax.scan(scan_body, x, params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x[:, -1]), 'batch', 'vocab'), {"ssm": caches}
+
+
+def _hybrid_prefill(params, cfg, batch, skv, block_kv):
+    b, s = batch["tokens"].shape
+    skv = skv or s
+    x = _embed_in(params, cfg, batch)
+    positions = _positions(cfg, batch, b, s)
+    per = cfg.shared_attn_every
+    groups = cfg.n_layers // per
+    gl = jax.tree.map(
+        lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+
+    def inner(x, lp):
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        lp_ssm = {k: v for k, v in lp.items() if k != "ln"}
+        y, cache = ssm_mod.ssm_block(lp_ssm, h, cfg, return_cache=True)
+        return x + y, cache
+
+    ssm_caches, shared_k, shared_v = [], [], []
+    for g in range(groups):
+        lp_g = jax.tree.map(lambda a: a[g], gl)
+        x, cache_g = jax.lax.scan(inner, x, lp_g)
+        ssm_caches.append(cache_g)
+        x, (k, v) = _shared_block(params["shared"], cfg, x, positions,
+                                  block_kv)
+        shared_k.append(_pad_cache(k, skv))
+        shared_v.append(_pad_cache(v, skv))
+    ssm_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *ssm_caches)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x[:, -1]), 'batch', 'vocab'), {
+        "ssm": ssm_cache,
+        "shared": {"k": jnp.stack(shared_k), "v": jnp.stack(shared_v)},
+    }
+
+
+def _whisper_prefill(params, cfg, batch, skv, block_kv):
+    frames = batch["frames"].astype(COMPUTE_DTYPE)
+    b, f, _ = frames.shape
+    xe = frames + sinusoidal_positions(f, cfg.d_model)[None].astype(
+        frames.dtype)
+
+    def enc_body(x, lp):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h)
+        o = attn.flash_attention(q, k, v, causal=False, block_kv=block_kv)
+        x = x + attn.out_proj(lp["attn"], o)
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        return x + mlp(lp["mlp"], h2, cfg.act), None
+
+    xe, _ = jax.lax.scan(enc_body, xe, params["enc_layers"])
+    enc_out = rmsnorm(params["enc_norm"], xe, cfg.norm_eps)
+
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    skv = skv or s
+    x = embed(params, tokens) + sinusoidal_positions(
+        s, cfg.d_model)[None].astype(COMPUTE_DTYPE)
+
+    def dec_body(x, lp):
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h)
+        o = attn.flash_attention(q, k, v, causal=True, block_kv=block_kv)
+        x = x + attn.out_proj(lp["attn"], o)
+        hc = rmsnorm(lp["ln3"], x, cfg.norm_eps)
+        qc, kc, vc = _cross_qkv(lp["cross"], hc, enc_out)
+        oc = attn.flash_attention(qc, kc, vc, causal=False,
+                                  block_kv=block_kv)
+        x = x + attn.out_proj(lp["cross"], oc)
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h2, cfg.act)
+        return x, {"self_k": _pad_cache(k, skv), "self_v": _pad_cache(v, skv),
+                   "cross_k": kc.astype(COMPUTE_DTYPE),
+                   "cross_v": vc.astype(COMPUTE_DTYPE)}
+
+    x, ys = jax.lax.scan(dec_body, x, params["layers"])
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = hint(unembed(params, x[:, -1]), 'batch', 'vocab')
+    caches = {"self": {"k": ys["self_k"], "v": ys["self_v"]},
+              "cross": {"k": ys["cross_k"], "v": ys["cross_v"]}}
+    return logits, caches
+
+
+# ---------------------------------------------------------------------------
+# Decode: one token against seq_len caches
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, cfg: ArchConfig, caches, batch, mesh=None):
+    """batch: tokens (B,1), pos (B,). Returns (logits (B,V), new caches)."""
+    if cfg.enc_dec:
+        return _whisper_decode(params, cfg, caches, batch)
+    if cfg.family == "ssm":
+        return _ssm_decode(params, cfg, caches, batch)
+    if cfg.family == "hybrid":
+        return _hybrid_decode(params, cfg, caches, batch)
+
+    tokens, pos = batch["tokens"], batch["pos"]
+    b = tokens.shape[0]
+    x = embed(params, tokens)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    skv = caches["self"]["k"].shape[2]
+    positions = pos[:, None]
+    if cfg.rope_kind == "mrope":
+        positions = jnp.broadcast_to(pos[None, :, None], (3, b, 1))
+    windows = layer_windows(cfg, skv)
+    thetas = layer_thetas(cfg)
+    L = cfg.n_layers
+    win_xs = windows if windows is not None else jnp.zeros((L,))
+    th_xs = thetas if thetas is not None else jnp.full((L,), cfg.rope_theta)
+
+    def scan_body(carry, xs):
+        x, aux = carry
+        lp, kc, vc, w, th = xs
+        kc = hint(kc, "batch", "kv_seq", "kv_heads", None)
+        vc = hint(vc, "batch", "kv_seq", "kv_heads", None)
+        window = w if windows is not None else None
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h)
+        q, k = _apply_rope(cfg, q, k, positions, th)
+        kc, vc = attn.update_cache(kc, vc, k, v, pos)
+        o = attn.decode_attention(q, kc, vc, pos, window=window)
+        x = x + attn.out_proj(lp["attn"], o)
+        x, aux_l = _ffn_layer(lp, cfg, x, mesh)
+        return (x, aux + aux_l), {"k": kc, "v": vc}
+
+    (x, _), new_kv = jax.lax.scan(
+        scan_body, (x, jnp.float32(0.0)),
+        (params["layers"], caches["self"]["k"], caches["self"]["v"],
+         win_xs, th_xs))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x[:, -1]), 'batch', 'vocab'), {"self": new_kv}
+
+
+def _ssm_decode(params, cfg, caches, batch):
+    tokens = batch["tokens"]
+    x = embed(params, tokens)
+
+    def scan_body(x, xs):
+        lp, cache = xs
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        lp_ssm = {k: v for k, v in lp.items() if k != "ln"}
+        y, new_cache = ssm_mod.ssm_block(lp_ssm, h, cfg, cache=cache)
+        return x + y, new_cache
+
+    x, new_caches = jax.lax.scan(scan_body, x,
+                                 (params["layers"], caches["ssm"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x[:, -1]), 'batch', 'vocab'), {"ssm": new_caches}
+
+
+def _hybrid_decode(params, cfg, caches, batch):
+    tokens, pos = batch["tokens"], batch["pos"]
+    x = embed(params, tokens)
+    positions = pos[:, None]
+    per = cfg.shared_attn_every
+    groups = cfg.n_layers // per
+    gl = jax.tree.map(
+        lambda a: a.reshape((groups, per) + a.shape[1:]), params["layers"])
+    gc = jax.tree.map(
+        lambda a: a.reshape((groups, per) + a.shape[1:]), caches["ssm"])
+
+    def inner(x, xs):
+        lp, cache = xs
+        h = rmsnorm(lp["ln"], x, cfg.norm_eps)
+        lp_ssm = {k: v for k, v in lp.items() if k != "ln"}
+        y, new_cache = ssm_mod.ssm_block(lp_ssm, h, cfg, cache=cache)
+        return x + y, new_cache
+
+    new_ssm, new_k, new_v = [], [], []
+    for g in range(groups):
+        lp_g = jax.tree.map(lambda a: a[g], gl)
+        cache_g = jax.tree.map(lambda a: a[g], gc)
+        x, nc = jax.lax.scan(inner, x, (lp_g, cache_g))
+        new_ssm.append(nc)
+        kv = (caches["shared"]["k"][g], caches["shared"]["v"][g])
+        x, (kc, vc) = _shared_block(params["shared"], cfg, x, positions,
+                                    attn.DEFAULT_BLOCK_KV, kv_cache=kv,
+                                    pos=pos)
+        new_k.append(kc)
+        new_v.append(vc)
+    ssm_cache = jax.tree.map(lambda *xs: jnp.concatenate(xs, 0), *new_ssm)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x[:, -1]), 'batch', 'vocab'), {
+        "ssm": ssm_cache,
+        "shared": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+    }
+
+
+def _whisper_decode(params, cfg, caches, batch):
+    tokens, pos = batch["tokens"], batch["pos"]
+    b = tokens.shape[0]
+    x = embed(params, tokens)
+    # sinusoidal position of the current step, gathered per sequence
+    skv = caches["self"]["k"].shape[2]
+    pos_table = sinusoidal_positions(skv, cfg.d_model).astype(x.dtype)
+    x = x + pos_table[pos][:, None]
+
+    def scan_body(x, xs):
+        lp, kc, vc, ck, cv = xs
+        h = rmsnorm(lp["ln1"], x, cfg.norm_eps)
+        q, k, v = attn.qkv_proj(lp["attn"], h)
+        kc, vc = attn.update_cache(kc, vc, k, v, pos)
+        o = attn.decode_attention(q, kc, vc, pos)
+        x = x + attn.out_proj(lp["attn"], o)
+        hc = rmsnorm(lp["ln3"], x, cfg.norm_eps)
+        qc = jnp.einsum("bsd,dhe->bshe", hc, cast(lp["cross"]["wq"],
+                                                  hc.dtype))
+        f = ck.shape[1]
+        oc = attn.decode_attention(
+            qc, ck, cv, jnp.full((b,), f - 1, jnp.int32))
+        x = x + attn.out_proj(lp["cross"], oc)
+        h2 = rmsnorm(lp["ln2"], x, cfg.norm_eps)
+        x = x + mlp(lp["mlp"], h2, cfg.act)
+        return x, {"k": kc, "v": vc}
+
+    x, new_kv = jax.lax.scan(
+        scan_body, x,
+        (params["layers"], caches["self"]["k"], caches["self"]["v"],
+         caches["cross"]["k"], caches["cross"]["v"]))
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return hint(unembed(params, x[:, -1]), 'batch', 'vocab'), {
+        "self": new_kv, "cross": caches["cross"]}

@@ -1,0 +1,2 @@
+from .fault_tolerance import (HostFailure, StragglerWatchdog, Supervisor,
+                              elastic_mesh_shape)

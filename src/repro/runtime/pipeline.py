@@ -1,0 +1,76 @@
+"""Pipeline parallelism (GPipe-style) over a mesh axis via shard_map +
+collective-permute.
+
+Completes the parallelism family (DP/FSDP/TP/EP/SP + PP): on the
+multi-pod mesh the "pod" axis can host pipeline stages instead of data
+parallelism - stage s holds layers [s*L/S, (s+1)*L/S); microbatches
+stream through with the classic (n_micro + n_stages - 1)-tick schedule;
+inter-stage activations move by one ppermute hop per tick (neighbor
+traffic only - exactly the cross-pod link topology, where all-reduce
+bandwidth is scarcest).
+
+The stage function must be shape-preserving ((mb, ...) -> (mb, ...)),
+which transformer blocks satisfy. Differentiable end to end (autodiff
+flows through ppermute and the schedule scan), so it composes with
+jax.grad for training. Bubble fraction = (S-1)/(T+S-1); pick
+n_micro >> n_stages.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def pipeline(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
+             stage_params: Any, x_micro: jnp.ndarray, mesh,
+             axis: str = "pod") -> jnp.ndarray:
+    """Run x_micro (n_micro, mb, ...) through n_stages = mesh.shape[axis]
+    pipeline stages. stage_params leaves are stacked (n_stages, ...) and
+    sharded over `axis`. Returns (n_micro, mb, ...) outputs (replicated
+    over `axis`)."""
+    n_stages = mesh.shape[axis]
+    n_micro = x_micro.shape[0]
+    other_axes = tuple(a for a in mesh.axis_names if a != axis)
+
+    def shard_fn(params_local, xs):
+        params_here = jax.tree.map(lambda a: a[0], params_local)
+        s = jax.lax.axis_index(axis)
+        last = n_stages - 1
+        perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+        def tick(carry, t):
+            cur, outputs = carry
+            m_in = jnp.clip(t, 0, n_micro - 1)
+            inp = jnp.where(s == 0, xs[m_in], cur)
+            y = stage_fn(params_here, inp)
+            m_out = t - last
+            emit = (s == last) & (m_out >= 0) & (m_out < n_micro)
+            m_out_c = jnp.clip(m_out, 0, n_micro - 1)
+            outputs = outputs.at[m_out_c].set(
+                jnp.where(emit, y, outputs[m_out_c]))
+            cur_next = jax.lax.ppermute(y, axis, perm) \
+                if n_stages > 1 else y
+            return (cur_next, outputs), None
+
+        cur0 = jnp.zeros_like(xs[0])
+        out0 = jnp.zeros_like(xs)
+        (cur, outputs), _ = jax.lax.scan(
+            tick, (cur0, out0), jnp.arange(n_micro + n_stages - 1))
+        # outputs live on the last stage only; share them with every stage
+        outputs = jnp.where(s == last, outputs, 0)
+        return jax.lax.psum(outputs, axis)
+
+    in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
+    return jax.shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=P(), check_vma=False,
+                         )(stage_params, x_micro)
+
+
+def bubble_fraction(n_micro: int, n_stages: int) -> float:
+    """Idle fraction of the GPipe schedule."""
+    total = n_micro + n_stages - 1
+    return (n_stages - 1) / total

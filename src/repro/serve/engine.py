@@ -1,0 +1,93 @@
+"""Batched serving loop: prefill + decode with fixed batch slots.
+
+Continuous-batching-lite: a fixed number of decode slots; finished
+sequences are replaced by queued requests at the next prefill boundary.
+Greedy or temperature sampling. This is the host-side loop around the
+jitted prefill/decode_step functions that the dry-run lowers for the
+production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, max_seq: int,
+                 batch_slots: int = 8, temperature: float = 0.0,
+                 seed: int = 0):
+        self.model = model
+        self.params = params
+        self.max_seq = max_seq
+        self.slots = batch_slots
+        self.temperature = temperature
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, skv=max_seq))
+        self._decode = jax.jit(model.decode_step)
+
+    def _sample(self, logits: jnp.ndarray) -> jnp.ndarray:
+        if self.temperature <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        return jax.random.categorical(
+            sub, logits / self.temperature).astype(jnp.int32)
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Serve all requests, `slots` at a time (padded static batch)."""
+        for lo in range(0, len(requests), self.slots):
+            self._generate_batch(requests[lo:lo + self.slots])
+        return requests
+
+    def _generate_batch(self, reqs: List[Request]) -> None:
+        b = self.slots
+        plen = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((b, plen), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
+        batch = {"tokens": jnp.asarray(toks)}
+        logits, caches = self._prefill(self.params, batch)
+        pos = jnp.full((b,), plen, jnp.int32)
+        tok = self._sample(logits)
+        max_new = max(r.max_new_tokens for r in reqs)
+        done = np.zeros(b, bool)
+        for i, r in enumerate(reqs):
+            r.out.append(int(tok[i]))
+        for _ in range(max_new - 1):
+            logits, caches = self._decode(
+                self.params, caches,
+                {"tokens": tok[:, None], "pos": pos})
+            tok = self._sample(logits)
+            pos = pos + 1
+            if bool((pos >= self.max_seq - 1).any()):
+                break
+            for i, r in enumerate(reqs):
+                if done[i] or len(r.out) >= r.max_new_tokens:
+                    done[i] = True
+                    continue
+                t = int(tok[i])
+                if r.eos_id is not None and t == r.eos_id:
+                    done[i] = True
+                    r.done = True
+                    continue
+                r.out.append(t)
+            if done.all():
+                break
+        for r in reqs:
+            r.done = True

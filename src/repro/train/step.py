@@ -1,0 +1,94 @@
+"""Training step builder: loss, grads, microbatch accumulation, optimizer.
+
+`make_train_step(model, opt_cfg, ...)` returns a pure step function
+suitable for jax.jit with in/out shardings from the model's spec trees.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models.model import Model
+from ..optim import optimizer as opt
+
+AUX_LOSS_WEIGHT = 0.01
+Z_LOSS_WEIGHT = 1e-4
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over masked tokens + z-loss (logit-norm regularizer)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    label_logit = jnp.take_along_axis(
+        logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    ce = lse - label_logit
+    zl = jnp.square(lse)
+    if mask is None:
+        mask = jnp.ones_like(ce)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    return (ce * mask).sum() / denom, (zl * mask).sum() / denom
+
+
+def make_loss_fn(model: Model, mesh=None, remat="save_attn"):
+    def loss_fn(params, batch):
+        logits, aux = model.forward(params, batch, mesh=mesh, remat=remat)
+        ce, zl = cross_entropy(logits, batch["labels"],
+                               batch.get("loss_mask"))
+        loss = ce + AUX_LOSS_WEIGHT * aux + Z_LOSS_WEIGHT * zl
+        metrics = {"loss": loss, "ce": ce, "aux": aux,
+                   "ppl_log": ce}
+        return loss, metrics
+
+    return loss_fn
+
+
+def init_state(model: Model, key: jax.Array) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "opt": opt.init(params)}
+
+
+def make_train_step(model: Model, opt_cfg: opt.OptimizerConfig, mesh=None,
+                    remat="save_attn", microbatches: int = 1):
+    loss_fn = make_loss_fn(model, mesh=mesh, remat=remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                mb = b // microbatches
+                return x.reshape((microbatches, mb) + x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc = carry
+                (loss, _m), g = grad_fn(params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + loss), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_body, (zero, jnp.float32(0.0)), mbatches)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = loss_sum / microbatches
+            metrics = {"loss": loss, "ce": loss,
+                       "aux": jnp.float32(0.0), "ppl_log": loss}
+        new_params, new_opt, opt_metrics = opt.update(
+            opt_cfg, grads, state["opt"], params)
+        metrics.update(opt_metrics)
+        return {"params": new_params, "opt": new_opt}, metrics
+
+    return train_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# NOTE: do NOT set XLA_FLAGS / host device count here - smoke tests and
+# benchmarks must see the single real CPU device. Multi-device tests spawn
+# subprocesses that set the flag themselves (see test_distributed.py).

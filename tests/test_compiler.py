@@ -1,0 +1,114 @@
+"""Compiler: expression DAG -> AAP programs. Bit-exactness against the
+numpy oracle on the device simulator + optimization quality (AAP counts
+never regress) + hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (AmbitSubarray, Expr, ONE, ZERO, compile_expr,
+                        eval_expr, maj)
+
+WORDS = 4
+RNG = np.random.default_rng(7)
+VARS = {"x": 0, "y": 1, "z": 2}
+
+
+def run_on_sim(expr, env, optimize):
+    comp = compile_expr(expr, VARS, 3, optimize=optimize)
+    sub = AmbitSubarray(words=WORDS)
+    for name, row in VARS.items():
+        sub.write_row(row, env[name])
+    sub.run(comp.program)
+    return sub.read_row(3), comp
+
+
+def rand_env():
+    return {k: RNG.integers(0, 2**64, WORDS, dtype=np.uint64)
+            for k in VARS}
+
+
+X, Y, Z = Expr.var("x"), Expr.var("y"), Expr.var("z")
+
+CASES = [
+    X & Y, X | Y, X ^ Y, ~X, ~(X & Y), ~(X | Y), ~(X ^ Y),
+    (X & Y) & Z, (X | Y) | Z, (X ^ Y) ^ Z,
+    maj(X, Y, Z), ~maj(X, Y, Z),
+    (X & Y) | ((X & Y) ^ Z),              # CSE
+    ~((X | Y) & (Y ^ Z)),                 # fusion + mixed
+    ((X & Y) | (~Z & X)) ^ (Y | ~X),      # deep DAG
+    (X & ONE) | (Y & ZERO),               # constant folding
+    ~~X & Y,                              # double negation
+]
+
+
+@pytest.mark.parametrize("expr", CASES, ids=[repr(e)[:40] for e in CASES])
+@pytest.mark.parametrize("optimize", [False, True])
+def test_compile_matches_oracle(expr, optimize):
+    env = rand_env()
+    got, _ = run_on_sim(expr, env, optimize)
+    assert np.array_equal(got, eval_expr(expr, env))
+
+
+@pytest.mark.parametrize("expr", CASES, ids=[repr(e)[:40] for e in CASES])
+def test_optimizer_never_regresses(expr):
+    n = compile_expr(expr, VARS, 3, optimize=False)
+    o = compile_expr(expr, VARS, 3, optimize=True)
+    assert o.stats.ns <= n.stats.ns
+
+
+def test_chain_and_reuses_designated_rows():
+    """Left-deep AND chains drop staging copies via TRA row reuse."""
+    n = compile_expr((X & Y) & Z, VARS, 3, optimize=False)
+    o = compile_expr((X & Y) & Z, VARS, 3, optimize=True)
+    assert n.n_aap == 8
+    assert o.n_aap < n.n_aap
+
+
+def test_nand_fusion_matches_paper_count():
+    o = compile_expr(~(X & Y), VARS, 3, optimize=True)
+    assert (o.n_aap, o.n_ap) == (5, 0)  # Figure 20b
+
+
+# -- hypothesis property tests -----------------------------------------------
+
+
+@st.composite
+def exprs(draw, depth=0):
+    if depth > 3 or draw(st.booleans()):
+        return draw(st.sampled_from([X, Y, Z]))
+    op = draw(st.sampled_from(["and", "or", "xor", "not", "maj"]))
+    if op == "not":
+        return ~draw(exprs(depth=depth + 1))
+    if op == "maj":
+        return maj(draw(exprs(depth=depth + 1)),
+                   draw(exprs(depth=depth + 1)),
+                   draw(exprs(depth=depth + 1)))
+    a = draw(exprs(depth=depth + 1))
+    b = draw(exprs(depth=depth + 1))
+    return {"and": a & b, "or": a | b, "xor": a ^ b}[op]
+
+
+@settings(max_examples=40, deadline=None)
+@given(exprs(), st.integers(0, 2**32 - 1))
+def test_random_expressions_bit_exact(expr, seed):
+    rng = np.random.default_rng(seed)
+    env = {k: rng.integers(0, 2**64, 2, dtype=np.uint64) for k in VARS}
+    comp = compile_expr(expr, VARS, 3, optimize=True)
+    sub = AmbitSubarray(words=2)
+    for name, row in VARS.items():
+        sub.write_row(row, env[name])
+    sub.run(comp.program)
+    assert np.array_equal(sub.read_row(3), eval_expr(expr, env))
+
+
+@settings(max_examples=25, deadline=None)
+@given(exprs())
+def test_demorgan_equivalence(expr):
+    """~(a&b) == ~a|~b at the compiled-program level (both bit-exact)."""
+    env = rand_env()
+    lhs = ~(expr & X)
+    rhs = ~expr | ~X
+    g1, _ = run_on_sim(lhs, env, True)
+    g2, _ = run_on_sim(rhs, env, True)
+    assert np.array_equal(g1, g2)

@@ -1,0 +1,169 @@
+"""Per-kernel validation: shape/dtype sweeps against the ref.py oracles
+(interpret mode on CPU) + hypothesis property tests on engine invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import BitVector, BulkBitwiseEngine
+from repro.core import expr as E
+from repro.core.bitvector import pack_bits, unpack_bits
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(3)
+
+
+def rand_u32(shape):
+    return jnp.asarray(RNG.integers(0, 2**32, shape, dtype=np.uint32))
+
+
+X, Y, Z = E.Expr.var("x"), E.Expr.var("y"), E.Expr.var("z")
+EXPRS = [X & Y, X ^ Y, ~X, ((X & Y) | ~Z) ^ (X | Y), E.maj(X, Y, Z)]
+
+
+@pytest.mark.parametrize("shape", [(1, 7), (3, 130), (16, 512), (129,),
+                                   (2, 3, 40)])
+@pytest.mark.parametrize("expr", EXPRS, ids=[repr(e)[:30] for e in EXPRS])
+def test_fused_bitwise_kernel(shape, expr):
+    env = {k: rand_u32(shape) for k in "xyz"}
+    got = ops.bitwise_eval(expr, env)
+    assert got.dtype == jnp.uint32
+    assert np.array_equal(np.asarray(got), np.asarray(ref.bitwise_eval(
+        expr, env)))
+
+
+@pytest.mark.parametrize("shape", [(1, 1), (4, 100), (33, 257), (257, 8)])
+def test_popcount_kernel(shape):
+    a = rand_u32(shape)
+    got = ops.popcount(a)
+    assert np.array_equal(np.asarray(got), np.asarray(ref.popcount(a)))
+
+
+@pytest.mark.parametrize("b,n", [(1, 32), (4, 64), (8, 320), (12, 1024),
+                                 (16, 4096), (32, 96)])
+def test_bitweaving_kernel(b, n):
+    vals = RNG.integers(0, 2**b, n).astype(np.uint32)
+    planes = ref.bitslice(jnp.asarray(vals), b)
+    lo, hi = sorted(RNG.integers(0, 2**b, 2).tolist())
+    got = ops.bitweaving_scan(planes, lo, hi)
+    expect = ref.bitweaving_scan(planes, lo, hi)
+    assert np.array_equal(np.asarray(got), np.asarray(expect))
+    mask = np.asarray(unpack_bits(got, n))
+    assert np.array_equal(mask, (vals >= lo) & (vals <= hi))
+
+
+@pytest.mark.parametrize("m,n,k", [(1, 1, 32), (5, 9, 64), (16, 16, 128),
+                                   (40, 70, 1000), (8, 128, 4096)])
+def test_binary_matmul_kernel(m, n, k):
+    kw = (k + 31) // 32
+    abits = RNG.integers(0, 2, (m, k)).astype(np.uint32)
+    bbits = RNG.integers(0, 2, (n, k)).astype(np.uint32)
+    ap = pack_bits(jnp.asarray(abits))[:, :kw]
+    bp = pack_bits(jnp.asarray(bbits))[:, :kw]
+    expect = (2 * abits.astype(np.int32) - 1) @ \
+        (2 * bbits.astype(np.int32) - 1).T
+    assert np.array_equal(np.asarray(ops.binary_matmul(ap, bp, k)), expect)
+    assert np.array_equal(np.asarray(ops.binary_matmul_mxu(ap, bp, k)),
+                          expect)
+
+
+# -- engine invariants (hypothesis) -------------------------------------------
+
+bit_arrays = st.integers(1, 200).flatmap(
+    lambda n: st.lists(st.booleans(), min_size=n, max_size=n))
+
+
+@settings(max_examples=30, deadline=None)
+@given(bit_arrays, bit_arrays, st.sampled_from(["jnp", "pallas"]))
+def test_engine_demorgan(a_bits, b_bits, backend):
+    n = min(len(a_bits), len(b_bits))
+    a = BitVector.from_bits(np.array(a_bits[:n], bool))
+    b = BitVector.from_bits(np.array(b_bits[:n], bool))
+    eng = BulkBitwiseEngine(backend)
+    lhs = eng.nand(a, b).bits()
+    rhs = eng.or_(~a, ~b).bits()
+    assert np.array_equal(np.asarray(lhs), np.asarray(rhs))
+
+
+@settings(max_examples=30, deadline=None)
+@given(bit_arrays)
+def test_engine_xor_involution(a_bits):
+    a = BitVector.from_bits(np.array(a_bits, bool))
+    eng = BulkBitwiseEngine("jnp")
+    twice = eng.xor(eng.xor(a, a), a).bits()
+    assert np.array_equal(np.asarray(twice), np.array(a_bits, bool))
+
+
+@settings(max_examples=30, deadline=None)
+@given(bit_arrays, bit_arrays)
+def test_engine_popcount_inclusion_exclusion(a_bits, b_bits):
+    n = min(len(a_bits), len(b_bits))
+    a = BitVector.from_bits(np.array(a_bits[:n], bool))
+    b = BitVector.from_bits(np.array(b_bits[:n], bool))
+    eng = BulkBitwiseEngine("jnp")
+    pc = lambda v: int(eng.popcount(v))
+    assert pc(eng.or_(a, b)) == pc(a) + pc(b) - pc(eng.and_(a, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(bit_arrays)
+def test_pack_unpack_roundtrip(bits):
+    arr = np.array(bits, bool)
+    bv = BitVector.from_bits(arr)
+    assert np.array_equal(np.asarray(bv.bits()), arr)
+    assert int(bv.popcount()) == int(arr.sum())
+
+
+def test_engine_backends_agree_on_majority():
+    a, b, c = (BitVector.from_bits(RNG.integers(0, 2, 500).astype(bool))
+               for _ in range(3))
+    outs = []
+    for backend in ("jnp", "pallas", "ambit_sim"):
+        eng = BulkBitwiseEngine(backend)
+        outs.append(np.asarray(eng.maj(a, b, c).bits()))
+    assert np.array_equal(outs[0], outs[1])
+    assert np.array_equal(outs[0], outs[2])
+
+
+@settings(max_examples=25, deadline=None)
+@given(bit_arrays, st.integers(-70, 70))
+def test_engine_shift_matches_numpy(a_bits, amount):
+    """Section 9.1 future-op: logical shift over packed words."""
+    arr = np.array(a_bits, bool)
+    eng = BulkBitwiseEngine("jnp")
+    got = np.asarray(eng.shift(BitVector.from_bits(arr), amount).bits())
+    want = np.zeros_like(arr)
+    n = len(arr)
+    if amount >= 0:
+        if amount < n:
+            want[amount:] = arr[:n - amount]
+    else:
+        if -amount < n:
+            want[:n + amount] = arr[-amount:]
+    assert np.array_equal(got, want), (amount, n)
+
+
+def test_tmr_ecc_homomorphism_and_scrub():
+    """Section 5.5: TMR is homomorphic over bitwise ops; majority decode
+    corrects single-replica flips (and is itself one TRA)."""
+    from repro.core.ecc import TMRCodec
+    rng = np.random.default_rng(0)
+    a = BitVector.from_bits(rng.integers(0, 2, 300).astype(bool))
+    b = BitVector.from_bits(rng.integers(0, 2, 300).astype(bool))
+    eng = BulkBitwiseEngine("jnp")
+    codec = TMRCodec(eng)
+    ea, eb = codec.encode(a), codec.encode(b)
+    # op on encoded replicas == encode(op on plaintext)
+    enc_res = codec.apply("xor", ea, eb)
+    plain = eng.xor(a, b)
+    assert np.array_equal(np.asarray(codec.decode(enc_res).bits()),
+                          np.asarray(plain.bits()))
+    # flip bits in ONE replica; scrub recovers
+    corrupted = enc_res[0].data.at[0].set(enc_res[0].data[0] ^ 0xFF)
+    enc_res[0] = BitVector(corrupted, enc_res[0].n_bits)
+    clean, n_fixed = codec.scrub(enc_res)
+    assert n_fixed == 8
+    assert np.array_equal(np.asarray(codec.decode(clean).bits()),
+                          np.asarray(plain.bits()))

@@ -1,0 +1,173 @@
+"""Device-model correctness: TRA majority, DCC NOT, RowClone, Figure-20
+templates, row-address grouping, and the bbop ISA."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (AmbitDevice, AmbitError, AmbitSubarray, B, C, D,
+                        program_stats)
+from repro.core.commands import (AAP, AP, Activate, B_GROUP_WORDLINES,
+                                 OP_TEMPLATES, Precharge, wordlines_for)
+
+RNG = np.random.default_rng(0)
+WORDS = 4
+
+
+def rand_row():
+    return RNG.integers(0, 2**64, WORDS, dtype=np.uint64)
+
+
+@pytest.fixture
+def sub():
+    return AmbitSubarray(words=WORDS)
+
+
+def test_b_group_mapping_matches_table2(sub):
+    # Table 2: B12 must raise exactly T0,T1,T2; B8 raises DCC0N,T0; etc.
+    assert B_GROUP_WORDLINES[12] == ("T0", "T1", "T2")
+    assert B_GROUP_WORDLINES[8] == ("DCC0N", "T0")
+    assert B_GROUP_WORDLINES[5] == ("DCC0N",)
+    assert wordlines_for(B(14)) == ("DCC0", "T1", "T2")
+    assert wordlines_for(D(7)) == ("D7",)
+
+
+def test_single_activate_restores_cell(sub):
+    a = rand_row()
+    sub.write_row(0, a)
+    sub.execute([Activate(D(0)), Precharge()])
+    assert np.array_equal(sub.read_row(0), a)
+
+
+def test_rowclone_fpm_copy(sub):
+    a = rand_row()
+    sub.write_row(0, a)
+    sub.run([AAP(D(0), D(5))])
+    assert np.array_equal(sub.read_row(5), a)
+    assert np.array_equal(sub.read_row(0), a)  # source preserved
+
+
+def test_control_row_init_copy(sub):
+    sub.run([AAP(C(0), D(3))])
+    assert np.all(sub.read_row(3) == 0)
+    sub.run([AAP(C(1), D(3))])
+    assert np.all(sub.read_row(3) == np.uint64(0xFFFFFFFFFFFFFFFF))
+
+
+def test_tra_is_bitwise_majority(sub):
+    a, b, c = rand_row(), rand_row(), rand_row()
+    sub.write_row(0, a)
+    sub.write_row(1, b)
+    sub.write_row(2, c)
+    sub.bbop("maj3", 6, 0, 1, 2)
+    expect = (a & b) | (b & c) | (c & a)
+    assert np.array_equal(sub.read_row(6), expect)
+
+
+def test_tra_overwrites_all_three_cells(sub):
+    """Section 3.1.2 issue 3: TRA destroys the source designated rows."""
+    a, b = rand_row(), rand_row()
+    sub.write_row(0, a)
+    sub.write_row(1, b)
+    sub.run([AAP(D(0), B(0)), AAP(D(1), B(1)), AAP(C(0), B(2)),
+             AP(B(12))])
+    expect = a & b
+    for wl in ("T0", "T1", "T2"):
+        assert np.array_equal(sub.t_rows[wl], expect), wl
+
+
+def test_dcc_not_capture(sub):
+    a = rand_row()
+    sub.write_row(0, a)
+    sub.run([AAP(D(0), B(5))])  # DCC0 = !a via n-wordline
+    assert np.array_equal(sub.dcc["DCC0"], ~a)
+    sub.run([AAP(B(4), D(7))])  # read capacitor back through d-wordline
+    assert np.array_equal(sub.read_row(7), ~a)
+
+
+@pytest.mark.parametrize("op", ["and", "or", "nand", "nor", "xor", "xnor"])
+def test_figure20_templates(sub, op):
+    a, b = rand_row(), rand_row()
+    expect = {"and": a & b, "or": a | b, "nand": ~(a & b),
+              "nor": ~(a | b), "xor": a ^ b, "xnor": ~(a ^ b)}[op]
+    sub.write_row(0, a)
+    sub.write_row(1, b)
+    sub.bbop(op, 5, 0, 1)
+    assert np.array_equal(sub.read_row(5), expect)
+    assert np.array_equal(sub.read_row(0), a)
+    assert np.array_equal(sub.read_row(1), b)
+
+
+def test_figure20_exhaustive_single_bit():
+    """All 4 input combinations for every 2-operand template."""
+    for op in ("and", "or", "nand", "nor", "xor", "xnor"):
+        for bits in itertools.product([0, 1], repeat=2):
+            s = AmbitSubarray(words=1)
+            full = np.uint64(0xFFFFFFFFFFFFFFFF)
+            a = np.array([full if bits[0] else 0], np.uint64)
+            b = np.array([full if bits[1] else 0], np.uint64)
+            s.write_row(0, a)
+            s.write_row(1, b)
+            s.bbop(op, 5, 0, 1)
+            ref = {"and": a & b, "or": a | b, "nand": ~(a & b),
+                   "nor": ~(a | b), "xor": a ^ b, "xnor": ~(a ^ b)}[op]
+            assert np.array_equal(s.read_row(5), ref), (op, bits)
+
+
+def test_paper_aap_counts():
+    """Figure 20's op costs: and=4 AAP, nand=5 AAP, xor=5 AAP+2 AP, not=2."""
+    counts = {}
+    for op, n_args in (("and", 3), ("nand", 3), ("xor", 3), ("not", 2)):
+        prog = OP_TEMPLATES[op](*[D(i) for i in range(n_args)])
+        st = program_stats(prog)
+        counts[op] = (st.aap_count, st.ap_count)
+    assert counts["and"] == (4, 0)
+    assert counts["nand"] == (5, 0)
+    assert counts["xor"] == (5, 2)
+    assert counts["not"] == (2, 0)
+
+
+def test_aap_latency_model():
+    """Section 4.3: one-B-address AAPs take 49 ns; B->B and D->D take 80."""
+    st = program_stats([AAP(D(0), B(0))])
+    assert st.ns == 49.0
+    st = program_stats([AAP(B(12), B(5))])  # the nand exception
+    assert st.ns == 80.0
+    st = program_stats([AAP(D(0), D(1))])   # plain RowClone-FPM
+    assert st.ns == 80.0
+
+
+def test_dual_activation_disagreeing_cells_is_undefined(sub):
+    a = rand_row()
+    sub.write_row(0, a)
+    # Put disagreeing values in T2,T3 then activate B10 from precharged.
+    sub.run([AAP(D(0), B(2))])
+    sub.run([AAP(C(1), B(3))])
+    if not np.array_equal(sub.t_rows["T2"], sub.t_rows["T3"]):
+        with pytest.raises(AmbitError):
+            sub.execute([Activate(B(10))])
+
+
+def test_device_bbop_and_allocator():
+    dev = AmbitDevice(banks=2, subarrays=2, words=WORDS)
+    slots_a = dev.alloc_rows(4)
+    slots_b = dev.alloc_rows(4)
+    slots_d = dev.alloc_rows(4)
+    a = np.stack([rand_row() for _ in range(4)])
+    b = np.stack([rand_row() for _ in range(4)])
+    dev.write(slots_a, a)
+    dev.write(slots_b, b)
+    dev.bbop("xor", slots_d, slots_a, slots_b)
+    assert np.array_equal(dev.read(slots_d), a ^ b)
+    st = dev.total_stats()
+    assert st.aap_count > 0 and st.energy_nj > 0
+
+
+def test_psm_copy_between_subarrays():
+    dev = AmbitDevice(banks=1, subarrays=2, words=WORDS)
+    a = rand_row()
+    dev.banks[0].subarrays[0].write_row(0, a)
+    dev.banks[0].psm_copy(0, 0, 1, 3)
+    assert np.array_equal(dev.banks[0].subarrays[1].read_row(3), a)
+    assert dev.banks[0].stats.ns > 0

@@ -1,0 +1,107 @@
+"""Dry-run profiler: lower a cell, break down traffic/flops by op line."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys
+import jax
+sys.path.insert(0, "src")
+from repro.launch.dryrun import build_cell, sharding_rules_for, mesh_shape_dict
+from repro.launch.mesh import make_production_mesh
+from repro.launch.hloparse import (HloModule, _DEF_RE, _CALLS_RE,
+                                   _all_shapes_bytes, _shape_nbytes,
+                                   _OPERAND_RE)
+from repro.models.sharding_ctx import axis_rules
+from repro.configs import SHAPES
+
+def profile(arch, shape_name, top=14, save=None):
+    mesh = make_production_mesh()
+    fn, shapes, shards = build_cell(arch, shape_name, mesh)
+    ms = mesh_shape_dict(mesh)
+    rules = sharding_rules_for(shape_name, SHAPES[shape_name].global_batch, ms)
+    with mesh, axis_rules(rules, ms):
+        compiled = jax.jit(fn, in_shardings=shards).lower(*shapes).compile()
+    txt = compiled.as_text()
+    if save:
+        open(save, "w").write(txt)
+    m = HloModule(txt)
+    fused = set()
+    for lines in m.comps.values():
+        for ln in lines:
+            for mm in _CALLS_RE.finditer(ln):
+                fused.add(mm.group(1))
+    items = []
+    for cname, lines in m.comps.items():
+        if cname in fused: continue
+        factor = m.mult[cname]
+        for ln in lines:
+            dm = _DEF_RE.match(ln)
+            if not dm: continue
+            rhs = dm.group(2)
+            opk = m._op_kind(rhs)
+            callee = None
+            if opk == "fusion":
+                cm = _CALLS_RE.search(rhs)
+                callee = cm.group(1) if cm else None
+                if callee is None or not m._is_anchor_fusion(callee): continue
+            elif opk not in m._ANCHOR_OPS and not any(
+                    opk.startswith(c) for c in ("all-", "reduce-sc", "collective")):
+                continue
+            b = _all_shapes_bytes(rhs.split("(", 1)[0])
+            if opk in ("dynamic-slice", "gather"):
+                items.append((2*b*factor, factor, ln)); continue
+            seen = {}
+            if "(" in rhs:
+                args = rhs.split("(", 1)[1].split(")", 1)[0]
+                for i, op in enumerate(_OPERAND_RE.findall(args)):
+                    dt, dims = m.shapes.get(op, ("", []))
+                    ob = _shape_nbytes(dt, dims)
+                    if callee and ob > 0:
+                        ob = m._sliced_read_bytes(callee, i, ob)
+                    seen[op] = min(seen.get(op, 1e30), ob)
+            items.append(((b + sum(seen.values())) * factor, factor, ln))
+    items.sort(key=lambda t: -t[0])
+    print(f"== {arch} {shape_name}: flops/dev={m.dot_flops():.3e} "
+          f"traffic/dev={m.traffic_bytes():.3e} coll/dev={m.collective_bytes()[0]:.3e}")
+    print("   mem term", m.traffic_bytes()/819e9, "s; compute",
+          m.dot_flops()/197e12, "s; coll", m.collective_bytes()[0]/50e9, "s")
+    for v, f, ln in items[:top]:
+        meta = ln.split(", metadata")
+        op_name = ""
+        if len(meta) > 1 and "op_name=" in meta[1]:
+            op_name = meta[1].split('op_name="')[1].split('"')[0][-60:]
+        print(f"  {v:9.3e} x{f:4d}  {meta[0][:110]}")
+        if op_name: print(f"             ^ {op_name}")
+
+def profile_coll(arch, shape_name, top=12):
+    mesh = make_production_mesh()
+    fn, shapes, shards = build_cell(arch, shape_name, mesh)
+    ms = mesh_shape_dict(mesh)
+    rules = sharding_rules_for(shape_name, SHAPES[shape_name].global_batch, ms)
+    with mesh, axis_rules(rules, ms):
+        compiled = jax.jit(fn, in_shardings=shards).lower(*shapes).compile()
+    m = HloModule(compiled.as_text())
+    items = []
+    for cname, lines in m.comps.items():
+        f = m.mult[cname]
+        for ln in lines:
+            if "-start" in ln: continue
+            dm = _DEF_RE.match(ln)
+            if not dm: continue
+            rhs = dm.group(2)
+            opk = m._op_kind(rhs)
+            if not any(opk.startswith(c) for c in ("all-", "reduce-scatter", "collective-permute")): continue
+            b = _all_shapes_bytes(rhs.split("(", 1)[0])
+            items.append((b*f, f, ln))
+    items.sort(key=lambda t: -t[0])
+    tot = sum(t[0] for t in items)
+    print(f"== {arch} {shape_name} collective bytes/dev ~= {tot:.3e}")
+    for v, f, ln in items[:top]:
+        meta = ln.split(", metadata")
+        op_name = meta[1].split('op_name="')[1].split('"')[0][-70:] if len(meta)>1 and 'op_name="' in meta[1] else ""
+        print(f"  {v:9.3e} x{f:4d}  {meta[0][:100]}")
+        if op_name: print(f"             ^ {op_name}")
+
+if __name__ == "__main__":
+    if sys.argv[1] == "coll":
+        profile_coll(sys.argv[2], sys.argv[3])
+    else:
+        profile(sys.argv[1], sys.argv[2], save=(sys.argv[3] if len(sys.argv) > 3 else None))
