@@ -2,6 +2,7 @@
 
 Prints ``name,us_per_call,derived`` CSV. Sections:
   fig20_*   AAP program counts (compiler opt) + bit-exactness
+  fig20b_*  batched ambit_sim engine path (rows/s + compile cache)
   table3_*  TRA failure rate vs process variation (Monte Carlo)
   fig21_*   raw throughput model vs Skylake/GTX745/HMC (+Ambit-3D)
   table4_*  energy nJ/KB vs DDR3 baseline
@@ -20,6 +21,7 @@ def main() -> None:
 
     sections = [
         paper_tables.fig20_programs,
+        paper_tables.fig20_batched,
         paper_tables.table3_variation,
         paper_tables.fig21_throughput,
         paper_tables.table4_energy,

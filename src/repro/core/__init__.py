@@ -9,7 +9,8 @@ Public API:
 from .bitvector import BitVector, pack_bits, unpack_bits
 from .commands import AAP, AP, B, C, D, OP_TEMPLATES, RowAddr
 from .compiler import CompiledProgram, compile_expr
-from .engine import BulkBitwiseEngine, OpStats
+from .engine import (BulkBitwiseEngine, OpStats, compile_cache_clear,
+                     compile_cache_info)
 from .expr import Expr, ONE, ZERO, eval_expr, maj
 from .geometry import DEFAULT_GEOMETRY, DRAMGeometry
 from .simulator import AmbitDevice, AmbitError, AmbitSubarray
@@ -22,7 +23,7 @@ __all__ = [
     "BitVector", "BulkBitwiseEngine", "C", "CommandStats", "CompiledProgram",
     "D", "DEFAULT_GEOMETRY", "DEFAULT_TIMING", "DRAMGeometry", "Expr", "ONE",
     "OP_TEMPLATES", "OpStats", "RowAddr", "TABLE3_PAPER", "TABLE4_PAPER",
-    "TimingParams", "ZERO", "compile_expr", "ddr3_energy_nj_per_kb",
-    "eval_expr", "maj", "op_energy_nj_per_kb", "pack_bits", "program_stats",
-    "unpack_bits",
+    "TimingParams", "ZERO", "compile_cache_clear", "compile_cache_info",
+    "compile_expr", "ddr3_energy_nj_per_kb", "eval_expr", "maj",
+    "op_energy_nj_per_kb", "pack_bits", "program_stats", "unpack_bits",
 ]

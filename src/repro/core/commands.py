@@ -10,6 +10,12 @@ Address spaces (Section 4.1):
 Wordlines: "T0".."T3" are ordinary cells. Each DCC row has a d-wordline
 ("DCC0"/"DCC1": capacitor <-> bitline) and an n-wordline ("DCC0N"/"DCC1N":
 capacitor <-> bitline-bar), per Section 3.2.
+
+Macro timing/energy is a pure function of each macro's address *groups*
+(B/C/D), never of concrete D-row indices - which is what lets the batched
+simulator account a whole row batch by scaling per-macro costs
+(CommandStats.add_macro(..., rows=n)) and lets the device dispatcher run
+one canonical-address template for a group of row slots.
 """
 
 from __future__ import annotations
@@ -285,4 +291,12 @@ OP_TEMPLATES = {
     "copy": seq_copy,
     "zero": seq_zero,
     "one": seq_one,
+}
+
+# Total row-address argument count per template (sources + destination).
+# Shared by the timing model and the differential tests so per-op argument
+# plumbing stays in one place.
+OP_ARITY = {
+    "not": 2, "and": 3, "or": 3, "nand": 3, "nor": 3, "xor": 3, "xnor": 3,
+    "maj3": 4, "copy": 2, "zero": 1, "one": 1,
 }

@@ -26,7 +26,7 @@ timing/energy cost summary (timing.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Tuple
 
 from . import commands as cmd
 from .commands import AAP, AP, B, C, D, Macro, RowAddr
@@ -40,9 +40,17 @@ _WL_ADDR = {"T0": B(0), "T1": B(1), "T2": B(2), "T3": B(3),
 
 @dataclasses.dataclass
 class CompiledProgram:
-    program: List[Macro]
+    """An immutable compiled AAP/AP program.
+
+    ``program`` and ``scratch_rows`` are tuples so one CompiledProgram can
+    be shared safely by the engine's compile cache across many eval calls
+    (the program depends only on the expression shape, the variable-name
+    ordering, the optimize flag and the D-group size - never on operand
+    data or batch size)."""
+
+    program: Tuple[Macro, ...]
     out_row: RowAddr
-    scratch_rows: List[int]
+    scratch_rows: Tuple[int, ...]
     stats: CommandStats
 
     @property
@@ -245,7 +253,8 @@ class Compiler:
 
     def _finish(self) -> CompiledProgram:
         st = program_stats(self.prog, self.timing)
-        return CompiledProgram(self.prog, D(self.dst_row), self.scratch, st)
+        return CompiledProgram(tuple(self.prog), D(self.dst_row),
+                               tuple(self.scratch), st)
 
     def _val(self, e: Expr) -> tuple:
         return (id(e), False)

@@ -12,6 +12,24 @@ The engine is the system-integration layer of Section 5: the bbop ISA
 (and/or/xor/... over row-aligned operands), the driver's co-location
 contract (operands of one call share sharding), and the accounting needed
 by the paper-table benchmarks.
+
+ambit_sim execution model (batched + cached)
+--------------------------------------------
+An eval call maps every row of the packed operands to one D-group row of a
+simulated subarray (the Section 5.2 co-location contract). Two levers make
+this fast enough for paper-table workloads at realistic bitvector sizes:
+
+  * **Compiled-program cache.** ``compile_expr`` output depends only on
+    ``(expression, sorted variable names, optimize, geometry.data_rows,
+    timing)`` - expressions are hash-consed (expr.py), so an LRU keyed on
+    those fields compiles each expression shape exactly once per process.
+    Inspect/reset with ``compile_cache_info()`` / ``compile_cache_clear()``.
+  * **Batched device execution.** All operand rows are written into one
+    ``AmbitSubarray(n_rows=N)`` and the AAP program runs **once** over the
+    whole batch instead of once per row (seed behavior, still available as
+    ``BulkBitwiseEngine(..., batch_rows=False)`` for differential testing
+    and benchmarks). Stats are scaled per row-batch, so the reported DRAM
+    ledger is identical to the per-row loop's.
 """
 
 from __future__ import annotations
@@ -26,7 +44,7 @@ import numpy as np
 
 from . import expr as E
 from .bitvector import BitVector
-from .compiler import compile_expr
+from .compiler import CompiledProgram, compile_expr
 from .geometry import DEFAULT_GEOMETRY, DRAMGeometry
 from .simulator import AmbitSubarray
 from .timing import DEFAULT_TIMING, CommandStats, TimingParams
@@ -42,17 +60,43 @@ class OpStats:
     bytes_touched: int = 0
 
 
+@functools.lru_cache(maxsize=256)
+def _compile_cached(expression: E.Expr, names: tuple, optimize: bool,
+                    data_rows: int, timing: TimingParams) -> CompiledProgram:
+    """Process-wide compiled-program cache.
+
+    Valid because Expr nodes are interned (identity == structural equality),
+    TimingParams is frozen, and CompiledProgram is immutable: the program
+    depends only on the expression shape, the variable-name order (row
+    assignment), the optimize flag and the D-group size."""
+    var_rows = {nm: i for i, nm in enumerate(names)}
+    return compile_expr(expression, var_rows, len(names), data_rows,
+                        optimize, timing)
+
+
+def compile_cache_info():
+    """functools cache statistics for the ambit_sim compile cache."""
+    return _compile_cached.cache_info()
+
+
+def compile_cache_clear() -> None:
+    _compile_cached.cache_clear()
+
+
 class BulkBitwiseEngine:
     def __init__(self, backend: str = "jnp",
                  geometry: DRAMGeometry = DEFAULT_GEOMETRY,
                  timing: TimingParams = DEFAULT_TIMING,
-                 optimize: bool = True):
+                 optimize: bool = True, batch_rows: bool = True):
         if backend not in ("jnp", "pallas", "ambit_sim"):
             raise ValueError(backend)
         self.backend = backend
         self.geometry = geometry
         self.timing = timing
         self.optimize = optimize
+        # batch_rows=False forces the legacy one-subarray-per-row loop
+        # (differential-testing / benchmark baseline; ambit_sim only).
+        self.batch_rows = batch_rows
         self.last_stats: Optional[OpStats] = None
 
     # -- expression evaluation ------------------------------------------------
@@ -74,8 +118,8 @@ class BulkBitwiseEngine:
         else:
             out = _jnp_eval(expression, arrays)
         self.last_stats = OpStats(
-            bytes_touched=sum(v.nbytes for v in env.values()) + out.nbytes
-            if hasattr(out, "nbytes") else 0)
+            bytes_touched=sum(v.nbytes for v in env.values())
+            + (out.nbytes if hasattr(out, "nbytes") else 0))
         return BitVector(out, n_bits)
 
     # -- bbop-style binary ops -------------------------------------------------
@@ -166,17 +210,19 @@ class BulkBitwiseEngine:
 
     def _eval_sim(self, expression: E.Expr, env: Dict[str, BitVector],
                   n_bits: int) -> BitVector:
-        """Execute the compiled AAP program on the device model, row by row.
+        """Execute the compiled AAP program on the device model.
 
         Each 'row' of the operand bitvectors maps to one D-group row of a
         simulated subarray (the Section 5.2 driver's co-location contract:
-        corresponding rows of all operands share a subarray)."""
+        corresponding rows of all operands share a subarray). The program
+        is fetched from the process-wide compile cache and - unless
+        ``batch_rows=False`` - executed once over a batch-``n_rows``
+        subarray: one write / one run / one read."""
         names = sorted(env.keys())
         var_rows = {nm: i for i, nm in enumerate(names)}
         dst_row = len(names)
-        compiled = compile_expr(expression, var_rows, dst_row,
-                                self.geometry.data_rows, self.optimize,
-                                self.timing)
+        compiled = _compile_cached(expression, tuple(names), self.optimize,
+                                   self.geometry.data_rows, self.timing)
         # Pack to uint64 words for the simulator.
         packed = {nm: _to_u64(np.asarray(env[nm].data)) for nm in names}
         some = packed[names[0]]
@@ -184,16 +230,28 @@ class BulkBitwiseEngine:
         flat = {nm: a.reshape(-1, a.shape[-1]) for nm, a in packed.items()}
         n_rows, words = next(iter(flat.values())).shape
 
-        out_rows = np.empty((n_rows, words), np.uint64)
-        total = CommandStats()
-        sub = AmbitSubarray(self.geometry, self.timing, words=words)
-        for r in range(n_rows):
+        if n_rows == 0:  # zero-row operands: nothing to execute
+            out_rows = np.empty((0, words), np.uint64)
+            total = CommandStats()
+        elif self.batch_rows:
+            sub = AmbitSubarray(self.geometry, self.timing, words=words,
+                                n_rows=n_rows)
             for nm in names:
-                sub.write_row(var_rows[nm], flat[nm][r])
-            sub.stats = CommandStats()
+                sub.write_row(var_rows[nm], flat[nm])
             sub.run(compiled.program)
-            out_rows[r] = sub.read_row(dst_row)
-            total.merge(sub.stats)
+            out_rows = sub.read_row(dst_row).reshape(n_rows, words)
+            total = sub.stats
+        else:  # legacy per-row loop (seed behavior; differential baseline)
+            out_rows = np.empty((n_rows, words), np.uint64)
+            total = CommandStats()
+            sub = AmbitSubarray(self.geometry, self.timing, words=words)
+            for r in range(n_rows):
+                for nm in names:
+                    sub.write_row(var_rows[nm], flat[nm][r])
+                sub.stats = CommandStats()
+                sub.run(compiled.program)
+                out_rows[r] = sub.read_row(dst_row)
+                total.merge(sub.stats)
 
         out32 = _to_u32(out_rows.reshape(lead + (words,)))
         self.last_stats = OpStats(ns=total.ns, energy_nj=total.energy_nj,

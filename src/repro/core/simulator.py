@@ -20,6 +20,28 @@ rows. Semantics follow Sections 2-4:
   the bitline for d-wordlines, negated through bitline-bar for n-wordlines.
 * PRECHARGE lowers all wordlines and disables the sense amplifiers.
 
+Batched execution model
+-----------------------
+The paper's headline claim is *throughput*: every subarray executing an AAP
+program operates on its full row buffer in parallel, and many subarrays and
+banks run the same program simultaneously (Section 7). `AmbitSubarray`
+models that with a leading batch dimension: all row state is held as
+``(n_rows, words)`` uint64 arrays, and one command stream executes **once**
+over all batch rows. Batch row ``i`` behaves exactly like an independent
+subarray executing the same program - TRA majority, DCC negation, 2-cell
+agreement checks and restore-on-activate are all elementwise, so batching
+is a pure vectorization with no behavioral change (tests/test_batched_sim.py
+proves bit- and stats-exactness differentially against the per-row path).
+The timing/energy ledger scales per-macro costs by ``n_rows``: the batch
+stands in for ``n_rows`` subarrays each spending the energy and (serially
+accounted, as the per-row loop did) the latency.
+
+D-group rows are materialized lazily: a row's backing array is only
+allocated when first read or written, seeded deterministically per
+``(seed, row_index)`` so boot content is independent of access order. This
+keeps a 1006-row geometry with a 1024-deep batch from allocating ~0.5 GB of
+untouched "undefined" cells.
+
 Rows are stored bit-packed as numpy uint64; all row-wide ops are vectorized.
 A timing/energy ledger (timing.py) accumulates per-command costs.
 """
@@ -27,7 +49,7 @@ A timing/energy ledger (timing.py) accumulates per-command costs.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,45 +72,88 @@ def _rand_rows(rng: np.random.Generator, n: int, words: int) -> np.ndarray:
 @dataclasses.dataclass
 class _SenseAmpState:
     active: bool = False
-    rowbuf: Optional[np.ndarray] = None  # (words,) uint64 when active
+    rowbuf: Optional[np.ndarray] = None  # (n_rows, words) uint64 when active
     open_wordlines: List[str] = dataclasses.field(default_factory=list)
 
 
 class AmbitSubarray:
-    """One subarray: D-rows + designated/control/DCC rows + sense amps."""
+    """One subarray: D-rows + designated/control/DCC rows + sense amps.
+
+    ``n_rows`` is the batch dimension (number of independent subarray
+    instances executing the same command stream in lockstep). All cell
+    state is ``(n_rows, words)`` uint64. The scalar API (``write_row`` /
+    ``read_row`` with 1-D ``(words,)`` data) remains valid when
+    ``n_rows == 1``; batched callers pass/receive ``(n_rows, words)``.
+    """
 
     def __init__(self, geometry: DRAMGeometry = DEFAULT_GEOMETRY,
                  timing: TimingParams = DEFAULT_TIMING,
-                 words: Optional[int] = None, seed: int = 0):
+                 words: Optional[int] = None, seed: int = 0,
+                 n_rows: int = 1):
+        if n_rows < 1:
+            raise ValueError("n_rows must be >= 1")
         self.geom = geometry
         self.timing = timing
         self.words = geometry.row_words if words is None else words
+        self.n_rows = n_rows
+        self._seed = seed
+        # Data rows power up with undefined content (modeled as random);
+        # materialized lazily per row index so huge geometries stay cheap.
+        self._d_rows: Dict[int, np.ndarray] = {}
         rng = np.random.default_rng(seed)
-        # Data rows power up with undefined content; model as random.
-        self.d_rows = _rand_rows(rng, geometry.data_rows, self.words)
         # Designated rows T0..T3 and DCC capacitors also undefined at boot.
         self.t_rows: Dict[str, np.ndarray] = {
-            t: _rand_rows(rng, 1, self.words)[0] for t in cmd.T_WORDLINES}
+            t: _rand_rows(rng, n_rows, self.words) for t in cmd.T_WORDLINES}
         self.dcc: Dict[str, np.ndarray] = {
-            d: _rand_rows(rng, 1, self.words)[0] for d in cmd.DCC_D_WORDLINES}
+            d: _rand_rows(rng, n_rows, self.words)
+            for d in cmd.DCC_D_WORDLINES}
         # Control rows are initialized at design time (Section 3.1.4).
-        self.c_rows = [np.zeros(self.words, np.uint64),
-                       np.full(self.words, np.iinfo(np.uint64).max, np.uint64)]
+        self.c_rows = [np.zeros((n_rows, self.words), np.uint64),
+                       np.full((n_rows, self.words),
+                               np.iinfo(np.uint64).max, np.uint64)]
         self.amp = _SenseAmpState()
         self.stats = CommandStats()
 
+    # -- D-group storage (lazy, deterministic boot content) ------------------
+
+    def _check_d_index(self, d_index: int) -> None:
+        if not 0 <= d_index < self.geom.data_rows:
+            raise IndexError(f"D{d_index} outside the D-group "
+                             f"(0..{self.geom.data_rows - 1})")
+
+    def _d_row(self, d_index: int) -> np.ndarray:
+        self._check_d_index(d_index)
+        row = self._d_rows.get(d_index)
+        if row is None:
+            rng = np.random.default_rng((self._seed, d_index))
+            row = _rand_rows(rng, self.n_rows, self.words)
+            self._d_rows[d_index] = row
+        return row
+
     # -- software-visible row access (models READ/WRITE via the controller) --
+
+    def _coerce_row(self, data: np.ndarray) -> np.ndarray:
+        """Validate/broadcast row data to the (n_rows, words) batch shape."""
+        data = np.asarray(data, dtype=np.uint64)
+        if data.shape == (self.words,):
+            return np.broadcast_to(data, (self.n_rows, self.words)).copy() \
+                if self.n_rows > 1 else data.reshape(1, self.words).copy()
+        if data.shape == (self.n_rows, self.words):
+            return data.copy()
+        raise ValueError(
+            f"row data must be ({self.words},) or "
+            f"({self.n_rows}, {self.words}) uint64, got {data.shape}")
 
     def write_row(self, d_index: int, data: np.ndarray) -> None:
         if self.amp.active:
             raise AmbitError("WRITE while bank activated is not modeled")
-        data = np.asarray(data, dtype=np.uint64)
-        if data.shape != (self.words,):
-            raise ValueError(f"row data must be ({self.words},) uint64")
-        self.d_rows[d_index] = data
+        self._check_d_index(d_index)  # never materialize just to overwrite
+        self._d_rows[d_index] = self._coerce_row(data)
 
     def read_row(self, d_index: int) -> np.ndarray:
-        return self.d_rows[d_index].copy()
+        """Row content: (words,) when n_rows == 1, else (n_rows, words)."""
+        row = self._d_row(d_index)
+        return row[0].copy() if self.n_rows == 1 else row.copy()
 
     # -- cell plumbing ------------------------------------------------------
 
@@ -100,14 +165,18 @@ class AmbitSubarray:
         if wl.startswith("C"):
             return self.c_rows[int(wl[1:])]
         if wl.startswith("D"):
-            return self.d_rows[int(wl[1:])]
+            return self._d_row(int(wl[1:]))
         raise KeyError(wl)
 
     def _set_cell(self, wl: str, value: np.ndarray) -> None:
+        # Cell state is updated by rebinding only (arrays are never mutated
+        # in place anywhere in the simulator), so storing `value` without a
+        # defensive copy is safe even when several cells alias the same
+        # row-buffer array.
         if wl.startswith("T"):
-            self.t_rows[wl] = value.copy()
+            self.t_rows[wl] = value
         elif wl.startswith("DCC"):
-            self.dcc[dcc_capacitor(wl)] = value.copy()
+            self.dcc[dcc_capacitor(wl)] = value
         elif wl.startswith("C"):
             # Control rows are pre-initialized constants: restoring the same
             # value (single-cell activate) is fine; overwriting is a bug in
@@ -115,7 +184,8 @@ class AmbitSubarray:
             if not np.array_equal(self.c_rows[int(wl[1:])], value):
                 raise AmbitError(f"control row {wl} is read-only")
         elif wl.startswith("D"):
-            self.d_rows[int(wl[1:])] = value.copy()
+            self._check_d_index(int(wl[1:]))
+            self._d_rows[int(wl[1:])] = value
         else:
             raise KeyError(wl)
 
@@ -131,9 +201,11 @@ class AmbitSubarray:
                 raise TypeError(c)
 
     def run(self, prog: Sequence[Macro]) -> None:
-        """Execute a macro (AAP/AP) program, accounting macro-level timing."""
+        """Execute a macro (AAP/AP) program once over all batch rows,
+        accounting macro-level timing/energy scaled by ``n_rows`` (the
+        batch models ``n_rows`` subarrays executing in lockstep)."""
         for m in prog:
-            self.stats.add_macro(m, self.timing)
+            self.stats.add_macro(m, self.timing, rows=self.n_rows)
             self.execute(m.expand())
 
     def _activate(self, addr: RowAddr) -> None:
@@ -153,14 +225,14 @@ class AmbitSubarray:
             contribs.append(~v if is_n_wordline(wl) else v)
         k = len(contribs)
         if k == 1:
-            rowbuf = contribs[0].copy()
-        elif k == 2:
+            rowbuf = contribs[0]  # aliasing is safe: updates rebind, never
+        elif k == 2:              # mutate (see _set_cell)
             if not np.array_equal(contribs[0], contribs[1]):
                 raise AmbitError(
                     "2-wordline ACTIVATE from precharged state with "
                     "disagreeing cells: bitline deviation is ~0 (undefined). "
                     "Ambit only uses B8-B11 as AAP copy destinations.")
-            rowbuf = contribs[0].copy()
+            rowbuf = contribs[0]
         elif k == 3:
             a, b, c = contribs
             rowbuf = (a & b) | (b & c) | (c & a)  # TRA majority, Section 3.1.1
@@ -242,18 +314,27 @@ class AmbitDevice:
 
     The driver/allocator abstraction (Section 5.2): `alloc` places bitvector
     pages so corresponding rows of co-operating bitvectors land in the same
-    subarray, enabling RowClone-FPM for every staging copy."""
+    subarray, enabling RowClone-FPM for every staging copy.
+
+    ``bbop`` groups the row slots of one call by destination ``(bank,
+    subarray)`` and dispatches each group as a single batched subarray
+    execution (the device-model analogue of subarray-level parallelism).
+    Calls whose source slots alias destination slots fall back to the
+    sequential per-slot path to preserve read-after-write ordering."""
 
     def __init__(self, geometry: DRAMGeometry = DEFAULT_GEOMETRY,
                  timing: TimingParams = DEFAULT_TIMING,
                  banks: Optional[int] = None, subarrays: Optional[int] = None,
-                 words: Optional[int] = None, seed: int = 0):
+                 words: Optional[int] = None, seed: int = 0,
+                 batch_groups: bool = True):
         self.geom = geometry
+        self.timing = timing
         n_banks = geometry.banks if banks is None else banks
         self.banks = [AmbitBank(geometry, timing, subarrays, words, seed + 97 * b)
                       for b in range(n_banks)]
         self.words = self.banks[0].subarrays[0].words
         self.row_bytes = self.words * 8
+        self.batch_groups = batch_groups
         self._alloc_cursor = 0  # next free (bank, subarray, row) triple
 
     # -- allocator (Section 5.2 driver) --------------------------------------
@@ -285,10 +366,107 @@ class AmbitDevice:
 
         If corresponding slots are co-located in one subarray, the op runs
         fully in-subarray (RowClone-FPM staging). Otherwise sources are
-        first PSM-copied into the destination's subarray (slow path)."""
-        for i, d in enumerate(dst):
-            slot_srcs = [s[i] for s in srcs]
-            self._bbop_row(op, d, slot_srcs)
+        first PSM-copied into the destination's subarray (slow path).
+
+        Slots are grouped by destination ``(bank, subarray)`` and each
+        group executes its AAP program once, batched over the group's rows
+        - unless a source slot aliases a destination slot, in which case
+        the call runs slot-by-slot in order (sequential semantics)."""
+        slots = [(d, [s[i] for s in srcs]) for i, d in enumerate(dst)]
+        if not self.batch_groups or self._has_hazard(slots):
+            for d, slot_srcs in slots:
+                self._bbop_row(op, d, slot_srcs)
+            return
+        # fall through: no slot aliases another slot's destination or any
+        # staging scratch row, so group execution order cannot matter
+        groups: Dict[Tuple[int, int], List[tuple]] = {}
+        for d, slot_srcs in slots:
+            groups.setdefault((d[0], d[1]), []).append((d, slot_srcs))
+        for (db, ds), group in groups.items():
+            if len(group) == 1:
+                d, slot_srcs = group[0]
+                self._bbop_row(op, d, slot_srcs)
+            else:
+                self._bbop_group(op, db, ds, group)
+
+    def _has_hazard(self, slots: List[tuple]) -> bool:
+        """True when batched grouping could reorder a read past a write:
+        a source slot aliases a destination slot, or a destination/source
+        slot aliases a PSM staging scratch row (top of the D-group) that
+        some slot's staging will overwrite."""
+        dst_set = {d for d, _ in slots}
+        scratch_set = set()
+        for (db, ds, _), slot_srcs in slots:
+            scratch = self.geom.data_rows - 1
+            for s in slot_srcs:
+                if (s[0], s[1]) != (db, ds):
+                    scratch_set.add((db, ds, scratch))
+                    scratch -= 1
+        if dst_set & scratch_set:
+            return True
+        return any(s in dst_set or s in scratch_set
+                   for _, slot_srcs in slots for s in slot_srcs)
+
+    def _bbop_group(self, op: str, db: int, ds: int,
+                    group: List[tuple]) -> None:
+        """One batched dispatch for all slots destined to subarray
+        ``(db, ds)``: gather (PSM-staged if needed) source rows, execute the
+        op template once over a batch of ``len(group)`` rows, scatter the
+        results into the destination rows. Stats are identical to the
+        per-slot path (macro costs scale by the batch size; staging costs
+        accounted per slot)."""
+        sub = self.banks[db].subarrays[ds]
+        n = len(group)
+        n_srcs = len(group[0][1])
+        gathered = [np.empty((n, self.words), np.uint64)
+                    for _ in range(n_srcs)]
+        for gi, (_, slot_srcs) in enumerate(group):
+            # Stage exactly as the sequential path does (descending scratch
+            # rows per slot), gathering each source's value right after its
+            # staging so later slots' staging cannot clobber it.
+            scratch = self.geom.data_rows - 1
+            for si, s in enumerate(slot_srcs):
+                gathered[si][gi], scratch = \
+                    self._fetch_src(db, ds, s, scratch)
+        batch = AmbitSubarray(self.geom, self.timing, words=self.words,
+                              n_rows=n)
+        for si in range(n_srcs):
+            batch.write_row(si, gathered[si])
+        batch.bbop(op, n_srcs, *range(n_srcs))
+        out = batch.read_row(n_srcs).reshape(n, self.words)
+        for gi, (d, _) in enumerate(group):
+            sub.write_row(d[2], out[gi])
+        sub.stats.merge(batch.stats)
+
+    def _fetch_src(self, db: int, ds: int, src: tuple,
+                   scratch: int) -> Tuple[np.ndarray, int]:
+        """Source row content for a slot destined to subarray (db, ds),
+        accounting PSM staging cost when the source is not co-located (the
+        data still physically lands in the destination subarray's scratch
+        row, mirroring the sequential path). Returns (value, next_scratch)."""
+        sb, ss, sr = src
+        bank = self.banks[db]
+        if (sb, ss) == (db, ds):
+            return bank.subarrays[ds].read_row(sr), scratch
+        self._stage_psm(db, ds, src, scratch)
+        return bank.subarrays[ds].read_row(scratch), scratch - 1
+
+    def _stage_psm(self, db: int, ds: int, src: tuple, scratch: int) -> None:
+        """Stage a non-co-located source row into scratch row `scratch` of
+        subarray (db, ds): intra-bank via RowClone-PSM, inter-bank over the
+        channel (same latency/energy model, charged to the destination
+        bank). Single cost-model site for both dispatch paths."""
+        sb, ss, sr = src
+        bank = self.banks[db]
+        if sb == db:
+            bank.psm_copy(ss, sr, ds, scratch)
+            return
+        data = self.banks[sb].subarrays[ss].read_row(sr)
+        bank.subarrays[ds].write_row(scratch, data)
+        n_lines = self.row_bytes // 64
+        bank.stats.ns += 2 * DEFAULT_TIMING.tRAS + \
+            n_lines * AmbitBank.PSM_NS_PER_CACHELINE
+        bank.stats.energy_nj += n_lines * AmbitBank.PSM_NJ_PER_CACHELINE
 
     def _bbop_row(self, op: str, dst: tuple, srcs: List[tuple]) -> None:
         db, ds, dr = dst
@@ -296,20 +474,11 @@ class AmbitDevice:
         staged = []
         # Scratch rows for staging PSM copies live at the top of the D-group.
         scratch = self.geom.data_rows - 1
-        for (sb, ss, sr) in srcs:
-            if (sb, ss) == (db, ds):
-                staged.append(sr)
+        for src in srcs:
+            if (src[0], src[1]) == (db, ds):
+                staged.append(src[2])
             else:  # slow path: stage into the destination subarray
-                if sb == db:
-                    bank.psm_copy(ss, sr, ds, scratch)
-                else:
-                    data = self.banks[sb].subarrays[ss].read_row(sr)
-                    bank.subarrays[ds].write_row(scratch, data)
-                    row_bytes = self.row_bytes
-                    bank.stats.ns += 2 * DEFAULT_TIMING.tRAS + \
-                        (row_bytes // 64) * AmbitBank.PSM_NS_PER_CACHELINE
-                    bank.stats.energy_nj += (row_bytes // 64) * \
-                        AmbitBank.PSM_NJ_PER_CACHELINE
+                self._stage_psm(db, ds, src, scratch)
                 staged.append(scratch)
                 scratch -= 1
         bank.subarrays[ds].bbop(op, dr, *staged)

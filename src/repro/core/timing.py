@@ -78,25 +78,30 @@ class CommandStats:
     ns: float = 0.0
     energy_nj: float = 0.0
 
-    def add_activate(self, addr: RowAddr, params: TimingParams) -> None:
+    def add_activate(self, addr: RowAddr, params: TimingParams,
+                     rows: int = 1) -> None:
         n_wl = num_wordlines(addr)
-        self.activates += 1
-        self.wordlines += n_wl
-        self.energy_nj += params.e_act_nj * (
+        self.activates += rows
+        self.wordlines += rows * n_wl
+        self.energy_nj += rows * params.e_act_nj * (
             1.0 + params.extra_wordline_factor * (n_wl - 1))
 
-    def add_macro(self, macro: Macro, params: TimingParams) -> None:
+    def add_macro(self, macro: Macro, params: TimingParams,
+                  rows: int = 1) -> None:
+        """Account one macro executed over a batch of ``rows`` subarray rows
+        (batched execution: the costs of every lockstep instance are summed,
+        exactly as the per-row loop summed them)."""
         if isinstance(macro, AAP):
-            self.aap_count += 1
-            self.ns += params.aap_ns(macro.src, macro.dst)
-            self.add_activate(macro.src, params)
-            self.add_activate(macro.dst, params)
-            self.precharges += 1
+            self.aap_count += rows
+            self.ns += rows * params.aap_ns(macro.src, macro.dst)
+            self.add_activate(macro.src, params, rows)
+            self.add_activate(macro.dst, params, rows)
+            self.precharges += rows
         elif isinstance(macro, AP):
-            self.ap_count += 1
-            self.ns += params.ap_ns
-            self.add_activate(macro.addr, params)
-            self.precharges += 1
+            self.ap_count += rows
+            self.ns += rows * params.ap_ns
+            self.add_activate(macro.addr, params, rows)
+            self.precharges += rows
         else:
             raise TypeError(macro)
 
@@ -121,11 +126,10 @@ def program_stats(prog: Sequence[Macro],
 def op_energy_nj_per_kb(op: str, params: TimingParams = DEFAULT_TIMING,
                         row_bytes: int = 8192) -> float:
     """Modeled Ambit energy per KB of result for a Figure-20 op."""
-    from .commands import C, D, OP_TEMPLATES  # local import to avoid cycle
+    from .commands import D, OP_ARITY, OP_TEMPLATES  # local: avoid cycle
 
     tmpl = OP_TEMPLATES[op]
-    n_args = {"not": 2, "copy": 2, "zero": 1, "one": 1, "maj3": 4}.get(op, 3)
-    args = [D(i) for i in range(n_args)]
+    args = [D(i) for i in range(OP_ARITY[op])]
     prog = tmpl(*args)
     st = program_stats(prog, params)
     return st.energy_nj / (row_bytes / 1024.0)

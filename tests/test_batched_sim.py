@@ -1,0 +1,419 @@
+"""Differential harness: batched AmbitSubarray vs the per-row scalar path.
+
+The batched simulator's contract is that batch row ``i`` behaves exactly
+like an independent n_rows=1 subarray executing the same command stream.
+This suite proves it differentially:
+
+  * randomized AAP/AP macro programs (including 2- and 3-wordline B-group
+    activations, C-group sources/destinations and DCC n-wordlines) and all
+    OP_TEMPLATES ops, executed on N scalar subarrays vs one batch-N
+    subarray, asserting bit-exact row/cell contents and identical
+    CommandStats (counts exact; ns/energy to fp-roundoff);
+  * identical AmbitError raising for the two undefined-behaviour cases
+    (control-row overwrite, disagreeing 2-cell activation from precharged),
+    including when only a single batch row triggers them;
+  * engine-level equivalence: BulkBitwiseEngine("ambit_sim") batched vs
+    batch_rows=False, plus compile-cache behaviour;
+  * device-level equivalence: grouped batched dispatch vs sequential
+    per-slot dispatch, including PSM staging and the aliasing-hazard
+    fallback.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (AmbitDevice, AmbitError, AmbitSubarray, B, BitVector,
+                        BulkBitwiseEngine, C, CommandStats, D, DRAMGeometry,
+                        Expr, compile_cache_clear, compile_cache_info, maj)
+from repro.core.commands import AAP, AP, OP_ARITY, OP_TEMPLATES
+
+GEOM = DRAMGeometry(rows_per_subarray=32)  # 14 data rows: cheap full-state diff
+WORDS = 4
+N_ROWS = 5
+FULL = np.uint64(0xFFFFFFFFFFFFFFFF)
+
+
+# -- state injection / comparison helpers ------------------------------------
+
+
+def _inject_state(sub: AmbitSubarray, d_vals, t_vals, dcc_vals) -> None:
+    """Give a subarray fully deterministic cell state (boot content is
+    random, and scalar/batched RNG layouts differ by construction)."""
+    lo = 0 if sub.n_rows == 1 else None
+    for d, val in enumerate(d_vals):
+        sub.write_row(d, val if lo is None else val[lo])
+    for wl, val in t_vals.items():
+        sub.t_rows[wl] = val.copy() if lo is None else val[lo:lo + 1].copy()
+    for name, val in dcc_vals.items():
+        sub.dcc[name] = val.copy() if lo is None else val[lo:lo + 1].copy()
+
+
+def _make_state(rng: np.random.Generator):
+    """(N_ROWS, WORDS) content for every cell. T/DCC rows are drawn from a
+    small per-row pool so 2-cell activations agree often enough to exercise
+    both the defined and the undefined path."""
+    d_vals = [rng.integers(0, 2**64, (N_ROWS, WORDS), dtype=np.uint64)
+              for _ in range(GEOM.data_rows)]
+    pool = [np.zeros((N_ROWS, WORDS), np.uint64),
+            np.full((N_ROWS, WORDS), FULL, np.uint64),
+            rng.integers(0, 2**64, (N_ROWS, WORDS), dtype=np.uint64)]
+    t_vals = {wl: pool[rng.integers(3)].copy()
+              for wl in ("T0", "T1", "T2", "T3")}
+    dcc_vals = {name: pool[rng.integers(3)].copy()
+                for name in ("DCC0", "DCC1")}
+    return d_vals, t_vals, dcc_vals
+
+
+def _scalar_for_row(r, d_vals, t_vals, dcc_vals) -> AmbitSubarray:
+    sub = AmbitSubarray(GEOM, words=WORDS, n_rows=1)
+    for d, val in enumerate(d_vals):
+        sub.write_row(d, val[r])
+    for wl, val in t_vals.items():
+        sub.t_rows[wl] = val[r:r + 1].copy()
+    for name, val in dcc_vals.items():
+        sub.dcc[name] = val[r:r + 1].copy()
+    return sub
+
+
+def _batched(d_vals, t_vals, dcc_vals) -> AmbitSubarray:
+    sub = AmbitSubarray(GEOM, words=WORDS, n_rows=N_ROWS)
+    for d, val in enumerate(d_vals):
+        sub.write_row(d, val)
+    for wl, val in t_vals.items():
+        sub.t_rows[wl] = val.copy()
+    for name, val in dcc_vals.items():
+        sub.dcc[name] = val.copy()
+    return sub
+
+
+def _assert_stats_equal(got: CommandStats, want: CommandStats) -> None:
+    assert got.activates == want.activates
+    assert got.wordlines == want.wordlines
+    assert got.precharges == want.precharges
+    assert got.aap_count == want.aap_count
+    assert got.ap_count == want.ap_count
+    # float accumulation order differs (row-major vs x*n): fp-roundoff only
+    assert got.ns == pytest.approx(want.ns, rel=1e-12)
+    assert got.energy_nj == pytest.approx(want.energy_nj, rel=1e-12)
+
+
+def _run_differential(prog) -> None:
+    """Execute `prog` on N scalar subarrays and one batch-N subarray with
+    identical state; assert identical outcome (error or full final state +
+    stats)."""
+    rng = np.random.default_rng(hash(tuple(repr(m) for m in prog)) % 2**32)
+    d_vals, t_vals, dcc_vals = _make_state(rng)
+
+    scalar_subs = [_scalar_for_row(r, d_vals, t_vals, dcc_vals)
+                   for r in range(N_ROWS)]
+    scalar_err = False
+    scalar_total = CommandStats()
+    for sub in scalar_subs:
+        try:
+            sub.run(prog)
+        except AmbitError:
+            scalar_err = True
+        scalar_total.merge(sub.stats)
+
+    batched = _batched(d_vals, t_vals, dcc_vals)
+    batched_err = False
+    try:
+        batched.run(prog)
+    except AmbitError:
+        batched_err = True
+
+    assert batched_err == scalar_err, prog
+    if scalar_err:
+        return  # post-error state is explicitly undefined; outcome matched
+
+    for d in range(GEOM.data_rows):
+        got = batched.read_row(d)
+        for r, sub in enumerate(scalar_subs):
+            assert np.array_equal(got[r], sub.read_row(d)), (d, r, prog)
+    for wl in ("T0", "T1", "T2", "T3"):
+        for r, sub in enumerate(scalar_subs):
+            assert np.array_equal(batched.t_rows[wl][r],
+                                  sub.t_rows[wl][0]), (wl, r, prog)
+    for name in ("DCC0", "DCC1"):
+        for r, sub in enumerate(scalar_subs):
+            assert np.array_equal(batched.dcc[name][r],
+                                  sub.dcc[name][0]), (name, r, prog)
+    _assert_stats_equal(batched.stats, scalar_total)
+
+
+# -- randomized macro programs ------------------------------------------------
+
+
+def _rand_addr(rng, kind):
+    if kind == "src":
+        # biased toward defined behaviour but includes every address space
+        roll = rng.integers(10)
+        if roll < 5:
+            return D(int(rng.integers(GEOM.data_rows)))
+        if roll < 7:
+            return C(int(rng.integers(2)))
+        return B(int(rng.integers(16)))
+    if kind == "dst":
+        roll = rng.integers(10)
+        if roll < 5:
+            return B(int(rng.integers(16)))
+        if roll < 9:
+            return D(int(rng.integers(GEOM.data_rows)))
+        return C(int(rng.integers(2)))  # usually a control-row write error
+    raise KeyError(kind)
+
+
+def _rand_program(seed: int):
+    rng = np.random.default_rng(seed)
+    prog = []
+    for _ in range(int(rng.integers(2, 9))):
+        if rng.integers(4) == 0:
+            prog.append(AP(_rand_addr(rng, "src")))
+        else:
+            prog.append(AAP(_rand_addr(rng, "src"), _rand_addr(rng, "dst")))
+    return prog
+
+
+@pytest.mark.parametrize("seed", range(60))
+def test_random_programs_differential(seed):
+    _run_differential(_rand_program(seed))
+
+
+@pytest.mark.parametrize("op", sorted(OP_TEMPLATES))
+def test_op_templates_differential(op):
+    n_args = OP_ARITY[op]
+    args = [D(i) for i in range(n_args - 1)] + [D(GEOM.data_rows - 2)]
+    _run_differential(OP_TEMPLATES[op](*args))
+
+
+@pytest.mark.parametrize("op", sorted(OP_TEMPLATES))
+def test_batched_bbop_matches_oracle(op):
+    """Direct numpy-oracle check of batched bbop results for every op."""
+    rng = np.random.default_rng(11)
+    n_srcs = OP_ARITY[op] - 1
+    srcs = [rng.integers(0, 2**64, (N_ROWS, WORDS), dtype=np.uint64)
+            for _ in range(n_srcs)]
+    sub = AmbitSubarray(GEOM, words=WORDS, n_rows=N_ROWS)
+    for i, s in enumerate(srcs):
+        sub.write_row(i, s)
+    dst = GEOM.data_rows - 2
+    sub.bbop(op, dst, *range(n_srcs))
+    oracle = {
+        "not": lambda a: ~a, "copy": lambda a: a,
+        "and": lambda a, b: a & b, "or": lambda a, b: a | b,
+        "nand": lambda a, b: ~(a & b), "nor": lambda a, b: ~(a | b),
+        "xor": lambda a, b: a ^ b, "xnor": lambda a, b: ~(a ^ b),
+        "maj3": lambda a, b, c: (a & b) | (b & c) | (c & a),
+        "zero": lambda: np.zeros((N_ROWS, WORDS), np.uint64),
+        "one": lambda: np.full((N_ROWS, WORDS), FULL, np.uint64),
+    }[op](*srcs)
+    assert np.array_equal(sub.read_row(dst), oracle)
+
+
+# -- the two named undefined-behaviour cases ----------------------------------
+
+
+def test_control_row_write_raises_in_exactly_matching_rows():
+    """AAP(D0, C0) overwrites a control row unless D0 is all-zeros. Flip a
+    single bit in a single batch row: that row's scalar run raises, so the
+    batched run must raise too."""
+    prog = [AAP(D(0), C(0))]
+    d_vals = [np.zeros((N_ROWS, WORDS), np.uint64)
+              for _ in range(GEOM.data_rows)]
+    t_vals = {wl: np.zeros((N_ROWS, WORDS), np.uint64)
+              for wl in ("T0", "T1", "T2", "T3")}
+    dcc_vals = {n: np.zeros((N_ROWS, WORDS), np.uint64)
+                for n in ("DCC0", "DCC1")}
+
+    # all-zero D0: restoring C0's own value is legal on every row
+    batched = _batched(d_vals, t_vals, dcc_vals)
+    batched.run(prog)
+
+    d_vals[0][2, 1] = np.uint64(1)  # poison one word of one batch row
+    scalar = _scalar_for_row(2, d_vals, t_vals, dcc_vals)
+    with pytest.raises(AmbitError, match="read-only"):
+        scalar.run(prog)
+    batched = _batched(d_vals, t_vals, dcc_vals)
+    with pytest.raises(AmbitError, match="read-only"):
+        batched.run(prog)
+
+
+def test_disagreeing_two_cell_activate_raises_in_exactly_matching_rows():
+    """AP(B10) activates T2+T3 from precharged: defined iff they agree,
+    row by row."""
+    prog = [AP(B(10))]
+    d_vals = [np.zeros((N_ROWS, WORDS), np.uint64)
+              for _ in range(GEOM.data_rows)]
+    agree = np.full((N_ROWS, WORDS), FULL, np.uint64)
+    t_vals = {"T0": agree.copy(), "T1": agree.copy(),
+              "T2": agree.copy(), "T3": agree.copy()}
+    dcc_vals = {n: agree.copy() for n in ("DCC0", "DCC1")}
+
+    batched = _batched(d_vals, t_vals, dcc_vals)
+    batched.run(prog)  # all rows agree: defined everywhere
+
+    t_vals["T3"][4, 0] = np.uint64(0)  # one row now disagrees
+    scalar = _scalar_for_row(4, d_vals, t_vals, dcc_vals)
+    with pytest.raises(AmbitError, match="disagreeing"):
+        scalar.run(prog)
+    batched = _batched(d_vals, t_vals, dcc_vals)
+    with pytest.raises(AmbitError, match="disagreeing"):
+        batched.run(prog)
+
+
+# -- engine-level equivalence -------------------------------------------------
+
+
+X, Y, Z = Expr.var("x"), Expr.var("y"), Expr.var("z")
+ENGINE_EXPRS = [
+    X & Y,
+    ~(X ^ Y),
+    ((X & Y) | ~Z) ^ (X | Y),           # 6 ops
+    maj(X, Y, Z) ^ (~X | (Y & Z)),
+]
+
+
+@pytest.mark.parametrize("expr", ENGINE_EXPRS,
+                         ids=[repr(e)[:32] for e in ENGINE_EXPRS])
+@pytest.mark.parametrize("rows", [1, 3])
+def test_engine_batched_matches_per_row(expr, rows):
+    rng = np.random.default_rng(5)
+    bits = rng.integers(0, 2, (3, rows, 257)).astype(bool)
+    env = {k: BitVector.from_bits(bits[i]) for i, k in enumerate("xyz")}
+    batched = BulkBitwiseEngine("ambit_sim")
+    legacy = BulkBitwiseEngine("ambit_sim", batch_rows=False)
+    out_b = batched.eval(expr, env)
+    st_b = batched.last_stats
+    out_l = legacy.eval(expr, env)
+    st_l = legacy.last_stats
+    assert np.array_equal(np.asarray(out_b.bits()), np.asarray(out_l.bits()))
+    assert st_b.aap_count == st_l.aap_count
+    assert st_b.bytes_touched == st_l.bytes_touched
+    assert st_b.ns == pytest.approx(st_l.ns, rel=1e-12)
+    assert st_b.energy_nj == pytest.approx(st_l.energy_nj, rel=1e-12)
+
+
+def test_engine_zero_row_operands():
+    """Zero-row batches are a no-op in both modes (no subarray is built)."""
+    env = {k: BitVector.from_bits(np.zeros((0, 64), bool)) for k in "xy"}
+    for eng in (BulkBitwiseEngine("ambit_sim"),
+                BulkBitwiseEngine("ambit_sim", batch_rows=False)):
+        out = eng.eval(X & Y, env)
+        assert np.asarray(out.bits()).shape == (0, 64)
+        assert eng.last_stats.aap_count == 0
+        assert eng.last_stats.ns == 0.0
+
+
+def test_compile_cache_hits_across_calls():
+    compile_cache_clear()
+    eng = BulkBitwiseEngine("ambit_sim")
+    rng = np.random.default_rng(9)
+    expr = (X & Y) ^ ~Z
+    for _ in range(3):
+        bits = rng.integers(0, 2, (3, 2, 64)).astype(bool)
+        env = {k: BitVector.from_bits(bits[i]) for i, k in enumerate("xyz")}
+        eng.eval(expr, env)
+    info = compile_cache_info()
+    assert info.misses == 1 and info.hits == 2
+    # different optimize flag is a distinct program shape
+    BulkBitwiseEngine("ambit_sim", optimize=False).eval(expr, env)
+    assert compile_cache_info().misses == 2
+
+
+def test_engine_stats_scale_with_rows():
+    """A batch of R rows must report exactly R times the 1-row ledger."""
+    expr = X ^ Y
+    eng = BulkBitwiseEngine("ambit_sim")
+    rng = np.random.default_rng(13)
+
+    def stats_for(rows):
+        bits = rng.integers(0, 2, (2, rows, 128)).astype(bool)
+        env = {k: BitVector.from_bits(bits[i]) for i, k in enumerate("xy")}
+        eng.eval(expr, env)
+        return eng.last_stats
+
+    one = stats_for(1)
+    eight = stats_for(8)
+    assert eight.aap_count == 8 * one.aap_count
+    assert eight.ns == pytest.approx(8 * one.ns, rel=1e-12)
+    assert eight.energy_nj == pytest.approx(8 * one.energy_nj, rel=1e-12)
+
+
+# -- device-level equivalence -------------------------------------------------
+
+
+def _fresh_pair(**kw):
+    grouped = AmbitDevice(GEOM, banks=2, subarrays=2, words=WORDS, **kw)
+    seq = AmbitDevice(GEOM, banks=2, subarrays=2, words=WORDS,
+                      batch_groups=False, **kw)
+    return grouped, seq
+
+
+def _alloc_write(dev, rng, n):
+    slots = dev.alloc_rows(n)
+    data = rng.integers(0, 2**64, (n, dev.words), dtype=np.uint64)
+    dev.write(slots, data)
+    return slots, data
+
+
+@pytest.mark.parametrize("op", ["and", "xor", "nand", "maj3", "not"])
+@pytest.mark.parametrize("n", [1, 4, 13])
+def test_device_grouped_matches_sequential(op, n):
+    n_srcs = OP_ARITY[op] - 1
+    grouped, seq = _fresh_pair()
+    outs = []
+    for dev in (grouped, seq):
+        rng = np.random.default_rng(42)
+        src_slots, src_data = zip(*[_alloc_write(dev, rng, n)
+                                    for _ in range(n_srcs)]) \
+            if n_srcs else ((), ())
+        dst = dev.alloc_rows(n)
+        dev.bbop(op, dst, *src_slots)
+        outs.append((dev.read(dst), dev.total_stats()))
+    (got, st_g), (want, st_s) = outs
+    assert np.array_equal(got, want)
+    assert st_g.aap_count == st_s.aap_count
+    assert st_g.activates == st_s.activates
+    assert st_g.ns == pytest.approx(st_s.ns, rel=1e-12)
+    assert st_g.energy_nj == pytest.approx(st_s.energy_nj, rel=1e-12)
+
+
+def test_device_psm_slow_path_grouped_matches_sequential():
+    """Force non-co-located sources: slot lists deliberately misaligned so
+    every op needs PSM staging into the destination subarray."""
+    outs = []
+    for batch_groups in (True, False):
+        dev = AmbitDevice(GEOM, banks=2, subarrays=2, words=WORDS,
+                          batch_groups=batch_groups)
+        rng = np.random.default_rng(3)
+        a_slots, a_data = _alloc_write(dev, rng, 6)
+        b_slots, b_data = _alloc_write(dev, rng, 6)
+        d_slots = dev.alloc_rows(6)
+        # rotate sources: corresponding slots now live in other subarrays
+        dev.bbop("xor", d_slots, a_slots[1:] + a_slots[:1],
+                 b_slots[2:] + b_slots[:2])
+        expect = np.roll(a_data, -1, 0) ^ np.roll(b_data, -2, 0)
+        got = dev.read(d_slots)
+        assert np.array_equal(got, expect)
+        outs.append((got, dev.total_stats()))
+    (g, st_g), (s, st_s) = outs
+    assert np.array_equal(g, s)
+    assert st_g.aap_count == st_s.aap_count
+    assert st_g.ns == pytest.approx(st_s.ns, rel=1e-12)
+
+
+def test_device_aliasing_hazard_falls_back_to_sequential():
+    """dst of slot i feeds src of slot i+1: grouped execution must preserve
+    the sequential read-after-write chain (it falls back internally)."""
+    for batch_groups in (True, False):
+        dev = AmbitDevice(GEOM, banks=1, subarrays=1, words=WORDS,
+                          batch_groups=batch_groups)
+        rng = np.random.default_rng(8)
+        a_slots, a_data = _alloc_write(dev, rng, 3)
+        d_slots = dev.alloc_rows(3)
+        # d[0] = ~a[0]; d[1] = ~d[0]; d[2] = ~d[1]  (chained dependencies)
+        dev.bbop("not", d_slots, [a_slots[0], d_slots[0], d_slots[1]])
+        got = dev.read(d_slots)
+        assert np.array_equal(got[0], ~a_data[0])
+        assert np.array_equal(got[1], a_data[0])
+        assert np.array_equal(got[2], ~a_data[0])

@@ -74,14 +74,15 @@ def test_tra_overwrites_all_three_cells(sub):
              AP(B(12))])
     expect = a & b
     for wl in ("T0", "T1", "T2"):
-        assert np.array_equal(sub.t_rows[wl], expect), wl
+        # Row state is batched (n_rows, words); n_rows == 1 here.
+        assert np.array_equal(sub.t_rows[wl][0], expect), wl
 
 
 def test_dcc_not_capture(sub):
     a = rand_row()
     sub.write_row(0, a)
     sub.run([AAP(D(0), B(5))])  # DCC0 = !a via n-wordline
-    assert np.array_equal(sub.dcc["DCC0"], ~a)
+    assert np.array_equal(sub.dcc["DCC0"][0], ~a)
     sub.run([AAP(B(4), D(7))])  # read capacitor back through d-wordline
     assert np.array_equal(sub.read_row(7), ~a)
 
