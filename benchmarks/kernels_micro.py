@@ -60,12 +60,73 @@ def ambit_batched_speedup(n_rows: int = 1024, n_bits: int = 2048) -> List[Row]:
              f"dram_model_ns={st.ns:.0f}")]
 
 
+CHANNEL_BW = 34e9  # 2-channel DDR3 model (Section 7) for host round-trips
+
+
+def pim_resident_chain(n_ops: int = 6, rows: int = 128) -> List[Row]:
+    """Resident vs non-resident execution of a query_and_all-style chain
+    (Section 8.1 shape): ``n_ops`` dependent ANDs over a batch of ``rows``
+    row-sized (65,536-bit) bitvectors at real 8 KB geometry. The
+    non-resident baseline pays a host write of every operand and a host
+    read of every intermediate per op, and executes ops serially; the
+    resident path uploads once, chains in-DRAM through the placement-aware
+    planner (row groups across banks in parallel), and reads back only the
+    final result. The headline is the DRAM cost model: op time + channel
+    time for the host traffic each path actually generates."""
+    from repro.core import BitVector, BulkBitwiseEngine
+    from repro.pim import AmbitRuntime
+
+    rng = np.random.default_rng(0)
+    n_bits = 65536  # one full DRAM row per batch row
+    bits = rng.integers(0, 2, (n_ops + 1, rows, n_bits)).astype(bool)
+    vecs = [BitVector.from_bits(b) for b in bits]
+
+    eng = BulkBitwiseEngine("ambit_sim")
+
+    def host_chain():
+        acc, nbytes, ns = vecs[0], 0, 0.0
+        for bv in vecs[1:]:
+            acc = eng.and_(acc, bv)
+            nbytes += eng.last_stats.bytes_touched
+            ns += eng.last_stats.ns
+        return nbytes, ns
+
+    def resident_chain():
+        rt = AmbitRuntime(banks=8, subarrays=4, seed=1)
+        rs = []
+        for bv in vecs:
+            rs.append(rt.put(bv, near=rs[0].slots if rs else None))
+        acc = rs[0]
+        for r in rs[1:]:
+            prev = acc
+            acc = rt.and_(acc, r)
+            if prev is not rs[0]:
+                rt.free(prev)        # intermediates die in-DRAM
+        rt.get(acc)
+        return rt
+
+    us_host = _time(host_chain, reps=2)
+    us_res = _time(resident_chain, reps=2)
+    (host_bytes, host_ns), rt = host_chain(), resident_chain()
+    assert rt.host_reads == 1        # zero intermediate read-backs
+    res_bytes = rt.session_stats.bytes_touched
+    host_model = host_ns + host_bytes / CHANNEL_BW * 1e9
+    res_model = rt.session_stats.ns + res_bytes / CHANNEL_BW * 1e9
+    return [("kern_pim_resident_chain", us_res,
+             f"ops={n_ops} rows={rows} model_speedup="
+             f"{host_model / res_model:.1f}x "
+             f"(dram {host_ns / rt.session_stats.ns:.1f}x, traffic "
+             f"{host_bytes / res_bytes:.1f}x: {res_bytes} vs {host_bytes} B) "
+             f"host_wall={us_host:.0f}us")]
+
+
 def kernels_micro() -> List[Row]:
     from repro.core import expr as E
     from repro.kernels import ops, ref
 
     rows: List[Row] = []
     rows.extend(ambit_batched_speedup())
+    rows.extend(pim_resident_chain())
     rng = np.random.default_rng(0)
     shape = (256, 4096)  # 4 MB packed = 128 Mbit operands
     nbytes = int(np.prod(shape)) * 4

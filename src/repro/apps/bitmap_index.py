@@ -5,16 +5,21 @@ The paper's workload: "how many unique users were active every week for
 the past w weeks?" = popcount(AND of w weekly bitmaps); "how many male
 users were active each week?" = w popcounts of (weekly AND gender).
 
-All bulk ops route through the BulkBitwiseEngine, so the same query runs
-on the jnp/pallas backends (performance) or the ambit_sim backend
-(paper-fidelity, returning DRAM ns/nJ for the Fig. 22 benchmark).
+Two execution paths:
+
+  * host (non-resident) baseline - all bulk ops route through the
+    BulkBitwiseEngine, one binop at a time, each op paying the
+    host<->device round-trip (jnp/pallas for performance, ambit_sim for
+    the paper-fidelity DRAM ns/nJ ledger of Fig. 22);
+  * resident - pass an ``AmbitRuntime``: bitmaps are uploaded once at
+    ``add`` time, whole queries lower as one expression tree through the
+    placement-aware planner, and only the final popcount reads data back.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from ..core import BitVector, BulkBitwiseEngine, Expr
@@ -22,27 +27,56 @@ from ..core.engine import OpStats
 
 
 class BitmapIndex:
-    def __init__(self, n_users: int, engine: BulkBitwiseEngine):
+    def __init__(self, n_users: int,
+                 engine: Optional[BulkBitwiseEngine] = None,
+                 runtime=None):
+        if (engine is None) == (runtime is None):
+            raise ValueError("pass exactly one of engine= (host path) or "
+                             "runtime= (resident path)")
         self.n_users = n_users
         self.engine = engine
+        self.runtime = runtime
         self.bitmaps: Dict[str, BitVector] = {}
+        self.resident: Dict[str, object] = {}  # name -> ResidentBitVector
 
     def add(self, name: str, members: np.ndarray) -> None:
         bits = np.zeros(self.n_users, bool)
         bits[members] = True
-        self.bitmaps[name] = BitVector.from_bits(bits)
+        bv = BitVector.from_bits(bits)
+        if self.runtime is not None:
+            if name in self.resident:   # drop BEFORE picking a neighbor:
+                self.runtime.free(self.resident.pop(name))
+            # co-locate with already-loaded bitmaps: queries AND across them
+            near = next((r.slots for r in self.resident.values()
+                         if r.slots), None)
+            self.resident[name] = self.runtime.put(bv, name=name, near=near)
+        else:
+            self.bitmaps[name] = bv
+
+    @staticmethod
+    def _and_tree(names: List[str]) -> Expr:
+        acc = Expr.var(names[0])
+        for nm in names[1:]:
+            acc = acc & Expr.var(nm)
+        return acc
 
     def query_and_all(self, names: List[str]) -> Tuple[int, OpStats]:
         """popcount(AND over names) + accumulated engine stats."""
         total = OpStats()
+        if self.runtime is not None:
+            rt = self.runtime
+            out = rt.eval(self._and_tree(names),
+                          {nm: self.resident[nm] for nm in names})
+            total += rt.last_stats
+            count = rt.popcount(out)     # the only host read-back
+            total += rt.last_stats
+            rt.free(out)
+            return count, total
         acc = self.bitmaps[names[0]]
         for nm in names[1:]:
             acc = self.engine.and_(acc, self.bitmaps[nm])
-            st = self.engine.last_stats
-            if st:
-                total.ns += st.ns
-                total.energy_nj += st.energy_nj
-                total.aap_count += st.aap_count
+            if self.engine.last_stats:
+                total += self.engine.last_stats
         return int(self.engine.popcount(acc)), total
 
     def weekly_active_query(self, weeks: List[str], gender: str
@@ -50,16 +84,23 @@ class BitmapIndex:
         """The paper's two-part query (Section 8.1)."""
         total = OpStats()
         unique_all, st = self.query_and_all(weeks)
-        total.ns += st.ns
-        total.energy_nj += st.energy_nj
+        total += st
         per_week = []
+        if self.runtime is not None:
+            rt = self.runtime
+            g = self.resident[gender]
+            for wk in weeks:
+                inter = rt.and_(self.resident[wk], g)
+                total += rt.last_stats
+                per_week.append(rt.popcount(inter))
+                total += rt.last_stats
+                rt.free(inter)
+            return unique_all, per_week, total
         g = self.bitmaps[gender]
         for wk in weeks:
             inter = self.engine.and_(self.bitmaps[wk], g)
-            st2 = self.engine.last_stats
-            if st2:
-                total.ns += st2.ns
-                total.energy_nj += st2.energy_nj
+            if self.engine.last_stats:
+                total += self.engine.last_stats
             per_week.append(int(self.engine.popcount(inter)))
         return unique_all, per_week, total
 

@@ -13,7 +13,7 @@ from typing import Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import BulkBitwiseEngine
+from ..core import BitVector, BulkBitwiseEngine
 from ..core.bitvector import unpack_bits
 from ..kernels import ops, ref
 
@@ -58,6 +58,72 @@ def word_at_a_time_scan(values: np.ndarray, c1: int, c2: int) -> int:
     """The paper's CPU baseline: per-value comparisons on word-aligned
     integers (numpy vectorized = an optimistic SIMD baseline)."""
     return int(((values >= c1) & (values <= c2)).sum())
+
+
+def scan_expr(bits: int, c1: int, c2: int):
+    """The BitWeaving-V predicate c1 <= v <= c2 as ONE expression DAG over
+    plane variables p0..p{b-1} (MSB first) - the exact recurrence of
+    kernels/ref.bitweaving_scan, but lowered as a whole tree so the PIM
+    planner can schedule it as a single batched AAP program. Constant
+    folding (expr.py) prunes the ZERO/ONE seeds; CSE shares the plane
+    loads between the two comparisons."""
+    from ..core.expr import Expr, ONE, ZERO
+
+    def cmp(const: int):
+        gt, lt, eq = ZERO, ZERO, ONE
+        for i in range(bits):
+            cbit = (const >> (bits - 1 - i)) & 1
+            p = Expr.var(f"p{i}")
+            if cbit:
+                lt = lt | (eq & ~p)
+            else:
+                gt = gt | (eq & p)
+            eq = eq & ~(p ^ (ONE if cbit else ZERO))
+        return gt, lt, eq
+
+    gt1, lt1, eq1 = cmp(c1)
+    gt2, lt2, eq2 = cmp(c2)
+    return (gt1 | eq1) & (lt2 | eq2)
+
+
+def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
+                        runtime, keep_resident: bool = False):
+    """Run the scan fully resident: planes are uploaded once, the whole
+    predicate executes in-DRAM as one planner call, and only the selection
+    bitvector is read back for the popcount. Returns (count, OpStats,
+    selection) - ``selection`` is the still-resident predicate bitvector
+    when ``keep_resident`` (caller frees it), else None.
+
+    Planes stay resident across calls (cached on the column), so repeated
+    scans with different constants pay zero upload traffic."""
+    from ..core.engine import OpStats
+
+    total = OpStats()
+    resident = getattr(col, "_resident_planes", None)
+    if resident is None or resident[0] is not runtime:
+        if resident is not None:     # planes on a previous runtime: free
+            for rbv in resident[1]:
+                resident[0].free(rbv)
+        near = None
+        planes = []
+        for i in range(col.bits):
+            rbv = runtime.put(BitVector(col.planes[i], col.n_rows),
+                              name=f"p{i}", near=near)
+            total += runtime.last_stats
+            planes.append(rbv)
+            near = rbv.slots
+        col._resident_planes = resident = (runtime, planes)
+    env = {f"p{i}": rbv for i, rbv in enumerate(resident[1])}
+    out = runtime.eval(scan_expr(col.bits, int(c1), int(c2)), env)
+    total += runtime.last_stats
+    sel = runtime.get(out)           # the only per-query read-back
+    total += runtime.last_stats
+    # get() masked bits beyond n_bits=n_rows, so tail rows can't count
+    count = int(sel.popcount())
+    if not keep_resident:
+        runtime.free(out)
+        return count, total, None
+    return count, total, out
 
 
 def ambit_scan_stats(col: BitWeavingColumn, c1: int, c2: int,

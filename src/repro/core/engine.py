@@ -59,6 +59,19 @@ class OpStats:
     aap_count: int = 0
     bytes_touched: int = 0
 
+    def merge(self, other: "OpStats") -> "OpStats":
+        """Accumulate another ledger into this one (all fields - callers
+        used to sum ns/energy/aap by hand and silently drop
+        bytes_touched)."""
+        self.ns += other.ns
+        self.energy_nj += other.energy_nj
+        self.aap_count += other.aap_count
+        self.bytes_touched += other.bytes_touched
+        return self
+
+    def __iadd__(self, other: "OpStats") -> "OpStats":
+        return self.merge(other)
+
 
 @functools.lru_cache(maxsize=256)
 def _compile_cached(expression: E.Expr, names: tuple, optimize: bool,
@@ -81,6 +94,14 @@ def compile_cache_info():
 
 def compile_cache_clear() -> None:
     _compile_cached.cache_clear()
+
+
+def binop_expr(op: str) -> E.Expr:
+    """The bbop ISA's two-operand expressions over vars "a"/"b" (single
+    source of truth for the engine and the pim runtime)."""
+    x, y = E.Expr.var("a"), E.Expr.var("b")
+    return {"and": x & y, "or": x | y, "xor": x ^ y,
+            "nand": ~(x & y), "nor": ~(x | y), "xnor": ~(x ^ y)}[op]
 
 
 class BulkBitwiseEngine:
@@ -125,10 +146,7 @@ class BulkBitwiseEngine:
     # -- bbop-style binary ops -------------------------------------------------
 
     def _binop(self, op: str, a: BitVector, b: BitVector) -> BitVector:
-        x, y = E.Expr.var("a"), E.Expr.var("b")
-        table = {"and": x & y, "or": x | y, "xor": x ^ y,
-                 "nand": ~(x & y), "nor": ~(x | y), "xnor": ~(x ^ y)}
-        return self.eval(table[op], {"a": a, "b": b})
+        return self.eval(binop_expr(op), {"a": a, "b": b})
 
     def and_(self, a, b):
         return self._binop("and", a, b)
@@ -254,9 +272,13 @@ class BulkBitwiseEngine:
                 total.merge(sub.stats)
 
         out32 = _to_u32(out_rows.reshape(lead + (words,)))
+        # bytes_touched is host<->device traffic: every operand is written
+        # to the subarray and the result is read back (same accounting as
+        # the jnp path's inputs + output).
         self.last_stats = OpStats(ns=total.ns, energy_nj=total.energy_nj,
                                   aap_count=total.aap_count,
-                                  bytes_touched=out32.nbytes)
+                                  bytes_touched=out32.nbytes +
+                                  sum(v.nbytes for v in env.values()))
         bv = BitVector(jnp.asarray(out32), n_bits)
         # Padding rows beyond n_bits may be garbage from scratch state: mask.
         from .bitvector import _mask_tail

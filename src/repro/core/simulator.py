@@ -335,27 +335,29 @@ class AmbitDevice:
         self.words = self.banks[0].subarrays[0].words
         self.row_bytes = self.words * 8
         self.batch_groups = batch_groups
-        self._alloc_cursor = 0  # next free (bank, subarray, row) triple
+        self._allocator = None  # lazy RowAllocator (pim.allocator)
 
     # -- allocator (Section 5.2 driver) --------------------------------------
 
-    def alloc_rows(self, n_rows: int) -> List[tuple]:
-        """Allocate row slots striped across banks/subarrays for parallelism.
+    @property
+    def allocator(self):
+        """The device's RowAllocator (created lazily; striped placement
+        reproduces the seed bump-cursor order until rows are freed)."""
+        if self._allocator is None:
+            from ..pim.allocator import RowAllocator  # local: import cycle
+            self._allocator = RowAllocator.for_device(self)
+        return self._allocator
+
+    def alloc_rows(self, n_rows: int, policy: str = None,
+                   near: Sequence[tuple] = None) -> List[tuple]:
+        """Allocate row slots (back-compat shim over pim.RowAllocator;
+        default striped placement = the seed bump-cursor order).
         Returns [(bank, subarray, row), ...]."""
-        out = []
-        n_banks = len(self.banks)
-        n_subs = len(self.banks[0].subarrays)
-        data_rows = self.geom.data_rows
-        for _ in range(n_rows):
-            i = self._alloc_cursor
-            self._alloc_cursor += 1
-            bank = i % n_banks
-            sub = (i // n_banks) % n_subs
-            row = i // (n_banks * n_subs)
-            if row >= data_rows:
-                raise AmbitError("device full")
-            out.append((bank, sub, row))
-        return out
+        return self.allocator.alloc(n_rows, policy=policy, near=near)
+
+    def free_rows(self, slots: Sequence[tuple]) -> None:
+        """Release previously allocated row slots for reuse."""
+        self.allocator.free(slots)
 
     # -- bbop ISA (Section 5.1) ----------------------------------------------
 
@@ -451,22 +453,28 @@ class AmbitDevice:
         self._stage_psm(db, ds, src, scratch)
         return bank.subarrays[ds].read_row(scratch), scratch - 1
 
-    def _stage_psm(self, db: int, ds: int, src: tuple, scratch: int) -> None:
-        """Stage a non-co-located source row into scratch row `scratch` of
-        subarray (db, ds): intra-bank via RowClone-PSM, inter-bank over the
-        channel (same latency/energy model, charged to the destination
-        bank). Single cost-model site for both dispatch paths."""
+    def migrate_row(self, src: tuple, dst: tuple) -> None:
+        """Copy one row between arbitrary slots: intra-bank via
+        RowClone-PSM, inter-bank over the channel (same latency/energy
+        model, charged to the destination bank). Single cost-model site
+        for bbop staging and the pim store's migration planner."""
         sb, ss, sr = src
+        db, ds, dr = dst
         bank = self.banks[db]
         if sb == db:
-            bank.psm_copy(ss, sr, ds, scratch)
+            bank.psm_copy(ss, sr, ds, dr)
             return
         data = self.banks[sb].subarrays[ss].read_row(sr)
-        bank.subarrays[ds].write_row(scratch, data)
+        bank.subarrays[ds].write_row(dr, data)
         n_lines = self.row_bytes // 64
         bank.stats.ns += 2 * DEFAULT_TIMING.tRAS + \
             n_lines * AmbitBank.PSM_NS_PER_CACHELINE
         bank.stats.energy_nj += n_lines * AmbitBank.PSM_NJ_PER_CACHELINE
+
+    def _stage_psm(self, db: int, ds: int, src: tuple, scratch: int) -> None:
+        """Stage a non-co-located source row into scratch row `scratch` of
+        subarray (db, ds)."""
+        self.migrate_row(src, (db, ds, scratch))
 
     def _bbop_row(self, op: str, dst: tuple, srcs: List[tuple]) -> None:
         db, ds, dr = dst

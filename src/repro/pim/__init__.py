@@ -1,0 +1,18 @@
+"""PIM runtime: resident bitvectors, row allocation and placement-aware
+query planning over the Ambit device model.
+
+  RowAllocator                 - free-list (bank, subarray, row) allocation
+  PimStore / ResidentBitVector - bitvectors living in simulated DRAM
+  QueryPlanner                 - whole-Expr batched AAP scheduling
+  AmbitRuntime                 - the session API applications use
+"""
+
+from .allocator import COLOCATED, POLICIES, RowAllocator, STRIPED, Slot
+from .planner import PlanReport, QueryPlanner
+from .runtime import AmbitRuntime
+from .store import PimStore, ResidentBitVector
+
+__all__ = [
+    "AmbitRuntime", "COLOCATED", "PimStore", "PlanReport", "POLICIES",
+    "QueryPlanner", "ResidentBitVector", "RowAllocator", "STRIPED", "Slot",
+]

@@ -1,0 +1,191 @@
+"""Placement-aware query planner: whole Expr trees over resident operands.
+
+The seed path lowered one binop at a time, each eval paying a host write
+of every operand and a host read of the result. The planner instead takes
+an entire expression DAG (``(w0 & w1) & w2 ...``), compiles it once
+through PR 1's process-wide compile cache, and executes it directly over
+resident rows:
+
+  * chunks (device rows) are grouped by the subarray that holds their
+    operands - each group runs the compiled AAP program **once**, batched
+    over the group's rows (the Section 7 subarray-level parallelism);
+  * operands that still span subarrays after the store's migration pass
+    are staged through the reserved scratch row (RowClone-PSM cost,
+    charged to the destination bank), mirroring the device bbop slow path;
+  * results are written to freshly allocated rows co-located with their
+    operands and returned as a *dirty* ResidentBitVector - no host
+    read-back happens until someone calls ``get``;
+  * a per-bank stat ledger is kept for each call: banks execute
+    independent row groups in parallel, so the reported time is the
+    **max over banks** while energy/AAP counts are summed (matching the
+    Fig. 21 bank-parallelism accounting).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import expr as E
+from ..core.engine import OpStats, _compile_cached
+from ..core.simulator import AmbitError, AmbitSubarray
+from ..core.timing import CommandStats
+from .store import PimStore, ResidentBitVector
+
+
+@dataclasses.dataclass
+class PlanReport:
+    """What one planner execution did, and what it cost."""
+
+    groups: int = 0                 # batched program dispatches
+    migrated_rows: int = 0          # PSM migrations performed up front
+    staged_rows: int = 0            # scratch stagings at execution time
+    per_bank_ns: Dict[int, float] = dataclasses.field(default_factory=dict)
+    stats: OpStats = dataclasses.field(default_factory=OpStats)
+
+
+class QueryPlanner:
+    def __init__(self, store: PimStore, optimize: bool = True,
+                 colocate: bool = True):
+        self.store = store
+        self.optimize = optimize
+        self.colocate = colocate
+        self.last_report: Optional[PlanReport] = None
+
+    # -- helpers -------------------------------------------------------------
+
+    def _validate(self, env: Dict[str, ResidentBitVector]
+                  ) -> Tuple[List[str], ResidentBitVector]:
+        if not env:
+            raise ValueError("planner needs at least one operand")
+        names = sorted(env)
+        first = env[names[0]]
+        for nm in names:
+            rbv = env[nm]
+            self.store._check_live(rbv)
+            if (rbv.n_bits, rbv.shape, rbv.n_slots) != (
+                    first.n_bits, first.shape, first.n_slots):
+                raise ValueError(
+                    "bbop operands must be row-aligned and equal-sized "
+                    "(Section 5.3)")
+        return names, first
+
+    def _bank_totals(self) -> Dict[int, CommandStats]:
+        dev = self.store.device
+        out = {}
+        for bi, bank in enumerate(dev.banks):
+            agg = CommandStats()
+            agg.merge(bank.stats)
+            for s in bank.subarrays:
+                agg.merge(s.stats)
+            out[bi] = agg
+        return out
+
+    # -- execution -----------------------------------------------------------
+
+    def execute(self, expression: E.Expr,
+                env: Dict[str, ResidentBitVector],
+                out_name: Optional[str] = None) -> ResidentBitVector:
+        """Evaluate ``expression`` over resident operands; the result stays
+        resident (dirty). Appears in ``last_report`` with per-bank timing."""
+        names, first = self._validate(env)
+        dev = self.store.device
+        geom, timing = dev.geom, dev.timing
+        report = PlanReport()
+        before = self._bank_totals()
+
+        operands = [env[nm] for nm in names]
+        if self.colocate and len(operands) > 1:
+            report.migrated_rows = self.store.colocate(operands)
+
+        # Destination rows co-located with their chunk's operands. Roll
+        # back on device-full so failed evals never leak live rows.
+        dst_slots: List[tuple] = []
+        try:
+            for i in range(first.n_slots):
+                hb, hs, _ = operands[0].slots[i]
+                try:
+                    (slot,) = self.store.allocator.alloc_in(hb, hs, 1)
+                except AmbitError:
+                    (slot,) = self.store.allocator.alloc(
+                        1, near=[r.slots[i] for r in operands])
+                dst_slots.append(slot)
+        except AmbitError:
+            self.store.allocator.free(dst_slots)
+            raise
+
+        compiled = _compile_cached(expression, tuple(names), self.optimize,
+                                   geom.data_rows, timing)
+        dst_row = len(names)
+
+        # Group chunk indices by destination subarray; each group is one
+        # batched program execution charged to that subarray's ledger.
+        groups: Dict[Tuple[int, int], List[int]] = {}
+        for i, (b, s, _) in enumerate(dst_slots):
+            groups.setdefault((b, s), []).append(i)
+
+        for (gb, gs), idxs in sorted(groups.items()):
+            sub = dev.banks[gb].subarrays[gs]
+            n = len(idxs)
+            batch = AmbitSubarray(geom, timing, words=dev.words, n_rows=n)
+            for vi, nm in enumerate(names):
+                rows = np.empty((n, dev.words), np.uint64)
+                for gi, i in enumerate(idxs):
+                    rows[gi] = self._fetch(env[nm].slots[i], gb, gs, report)
+                batch.write_row(vi, rows)
+            batch.run(compiled.program)
+            out = batch.read_row(dst_row).reshape(n, dev.words)
+            for gi, i in enumerate(idxs):
+                sub.write_row(dst_slots[i][2], out[gi])
+            sub.stats.merge(batch.stats)
+            report.groups += 1
+
+        after = self._bank_totals()
+        deltas = {bi: _delta(after[bi], before[bi]) for bi in after}
+        report.per_bank_ns = {bi: d.ns for bi, d in deltas.items()
+                              if d.ns > 0.0}
+        report.stats = OpStats(
+            ns=max((d.ns for d in deltas.values()), default=0.0),
+            energy_nj=sum(d.energy_nj for d in deltas.values()),
+            aap_count=sum(d.aap_count for d in deltas.values()),
+            bytes_touched=0)        # resident: no host traffic
+        self.last_report = report
+
+        return ResidentBitVector(
+            store=self.store, n_bits=first.n_bits, shape=first.shape,
+            words32=first.words32, chunks=first.chunks, slots=dst_slots,
+            dirty=True, name=out_name)
+
+    def _fetch(self, src: tuple, gb: int, gs: int,
+               report: PlanReport) -> np.ndarray:
+        """Value of a source row for a group executing in subarray
+        (gb, gs). Co-located rows are read in place; remote rows are
+        PSM-staged into the reserved scratch row first (paper cost model),
+        then read - one scratch row suffices because each staging is
+        consumed before the next."""
+        dev = self.store.device
+        sb, ss, sr = src
+        if (sb, ss) == (gb, gs):
+            return dev.banks[gb].subarrays[gs].read_row(sr)
+        if self.store.allocator.scratch_rows < 1:
+            raise AmbitError(
+                "non-co-located operand needs a reserved scratch row "
+                "(RowAllocator scratch_rows >= 1)")
+        scratch = dev.geom.data_rows - 1
+        dev.migrate_row(src, (gb, gs, scratch))
+        report.staged_rows += 1
+        return dev.banks[gb].subarrays[gs].read_row(scratch)
+
+
+def _delta(after: CommandStats, before: CommandStats) -> CommandStats:
+    d = CommandStats()
+    d.activates = after.activates - before.activates
+    d.wordlines = after.wordlines - before.wordlines
+    d.precharges = after.precharges - before.precharges
+    d.aap_count = after.aap_count - before.aap_count
+    d.ap_count = after.ap_count - before.ap_count
+    d.ns = after.ns - before.ns
+    d.energy_nj = after.energy_nj - before.energy_nj
+    return d

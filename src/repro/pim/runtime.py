@@ -1,0 +1,136 @@
+"""AmbitRuntime: the session API applications call instead of raw
+``engine.eval``.
+
+A runtime owns one simulated device, a RowAllocator, a PimStore and a
+QueryPlanner, and exposes the put / eval / get / free lifecycle:
+
+    rt = AmbitRuntime(banks=4, subarrays=4, words=64)
+    a, b = rt.put(bv_a), rt.put(bv_b)
+    acc = rt.and_(a, b)            # stays in DRAM - no host read-back
+    acc = rt.xor(acc, a)           # chains stay resident
+    result = rt.get(acc)           # the only host transfer
+    rt.free(acc)
+
+Per-call DRAM cost lands in ``last_stats`` (time = max over banks; energy
+and AAPs summed); ``session_stats`` accumulates across the session, and
+``bytes_touched`` counts only genuine host<->device transfers, so a
+resident chain's ledger shows exactly the data-movement win the paper is
+about.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from ..core import expr as E
+from ..core.bitvector import BitVector
+from ..core.engine import OpStats, binop_expr
+from ..core.geometry import DEFAULT_GEOMETRY, DRAMGeometry
+from ..core.simulator import AmbitDevice
+from ..core.timing import DEFAULT_TIMING, TimingParams
+from .allocator import STRIPED
+from .planner import QueryPlanner
+from .store import PimStore, ResidentBitVector
+
+
+class AmbitRuntime:
+    def __init__(self, geometry: DRAMGeometry = DEFAULT_GEOMETRY,
+                 timing: TimingParams = DEFAULT_TIMING,
+                 banks: Optional[int] = None,
+                 subarrays: Optional[int] = None,
+                 words: Optional[int] = None,
+                 policy: str = STRIPED, optimize: bool = True,
+                 colocate: bool = True, scratch_rows: int = 4,
+                 seed: int = 0):
+        self.device = AmbitDevice(geometry, timing, banks=banks,
+                                  subarrays=subarrays, words=words,
+                                  seed=seed)
+        self.store = PimStore(self.device, policy=policy,
+                              scratch_rows=scratch_rows)
+        self.allocator = self.store.allocator
+        self.planner = QueryPlanner(self.store, optimize=optimize,
+                                    colocate=colocate)
+        self.session_stats = OpStats()
+        self.last_stats: Optional[OpStats] = None
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def put(self, bv: BitVector, name: Optional[str] = None,
+            near=None) -> ResidentBitVector:
+        rbv = self.store.put(bv, near=near, name=name)
+        self._account(OpStats(bytes_touched=rbv.device_bytes))
+        return rbv
+
+    def get(self, rbv: ResidentBitVector) -> BitVector:
+        was_dirty = rbv.dirty
+        out = self.store.get(rbv)
+        self._account(OpStats(
+            bytes_touched=rbv.device_bytes if was_dirty else 0))
+        return out
+
+    def free(self, rbv: ResidentBitVector) -> None:
+        self.store.free(rbv)
+
+    # -- evaluation ----------------------------------------------------------
+
+    def eval(self, expression: E.Expr,
+             env: Dict[str, ResidentBitVector],
+             out_name: Optional[str] = None) -> ResidentBitVector:
+        """Evaluate a whole expression tree over resident operands. The
+        result is a new resident bitvector; nothing crosses the channel."""
+        for nm, v in env.items():
+            if not isinstance(v, ResidentBitVector):
+                raise TypeError(
+                    f"operand {nm!r} is not resident - call put() first "
+                    "(the host path is BulkBitwiseEngine.eval)")
+        out = self.planner.execute(expression, env, out_name=out_name)
+        self._account(self.planner.last_report.stats)
+        return out
+
+    def _binop(self, op: str, a: ResidentBitVector,
+               b: ResidentBitVector) -> ResidentBitVector:
+        return self.eval(binop_expr(op), {"a": a, "b": b})
+
+    def and_(self, a, b):
+        return self._binop("and", a, b)
+
+    def or_(self, a, b):
+        return self._binop("or", a, b)
+
+    def xor(self, a, b):
+        return self._binop("xor", a, b)
+
+    def nand(self, a, b):
+        return self._binop("nand", a, b)
+
+    def nor(self, a, b):
+        return self._binop("nor", a, b)
+
+    def xnor(self, a, b):
+        return self._binop("xnor", a, b)
+
+    def not_(self, a: ResidentBitVector) -> ResidentBitVector:
+        return self.eval(~E.Expr.var("a"), {"a": a})
+
+    def maj(self, a, b, c) -> ResidentBitVector:
+        return self.eval(E.maj(E.Expr.var("a"), E.Expr.var("b"),
+                               E.Expr.var("c")), {"a": a, "b": b, "c": c})
+
+    def popcount(self, rbv: ResidentBitVector) -> int:
+        """Final reduction runs on the host (Section 9.1 future-op): this
+        reads the result back - the one transfer a resident query pays."""
+        return int(self.get(rbv).popcount())
+
+    # -- accounting ----------------------------------------------------------
+
+    @property
+    def host_reads(self) -> int:
+        return self.store.host_reads
+
+    @property
+    def host_writes(self) -> int:
+        return self.store.host_writes
+
+    def _account(self, st: OpStats) -> None:
+        self.last_stats = st
+        self.session_stats += st

@@ -1,0 +1,256 @@
+"""Resident bitvectors: data that lives in the simulated DRAM across calls.
+
+The seed engine re-shipped every operand host -> subarray -> host on each
+eval - exactly the memory-channel round-trip Ambit exists to avoid. The
+store keeps bitvectors *in* the device model between operations:
+
+  * ``put``  - pack a host BitVector into device rows (one allocator slot
+    per row-sized chunk) and return a ResidentBitVector handle;
+  * ``get``  - read it back (counted as host traffic; skipped entirely when
+    the handle is clean, i.e. the host copy is already current);
+  * ``free`` - release the rows for reuse.
+
+Dirty tracking: a handle is *dirty* when the device content has never been
+read back (planner results are born dirty); ``get`` on a clean handle
+returns the cached host copy without touching the device, so the
+bytes-touched ledger only grows for real host<->DRAM transfers.
+
+``colocate`` is the PSM/RowClone migration planner: operands of one op
+whose corresponding chunks landed in different subarrays are migrated
+(RowClone-PSM within a bank, channel copy across banks - both charged to
+the device ledger) so the op can run fully in-subarray.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.bitvector import BitVector, _mask_tail
+from ..core.engine import _to_u64
+from ..core.simulator import AmbitDevice, AmbitError
+from .allocator import RowAllocator, Slot, STRIPED
+
+
+@dataclasses.dataclass
+class ResidentBitVector:
+    """Handle to a bitvector resident in device rows.
+
+    ``slots`` is logical-row-major, chunk-minor: logical row r of the host
+    (rows, n_bits) layout occupies slots[r*chunks : (r+1)*chunks], each
+    holding one device-row-sized chunk of the packed words."""
+
+    store: "PimStore"
+    n_bits: int
+    shape: Tuple[int, ...]       # leading (batch) dims of the host layout
+    words32: int                 # packed uint32 words per logical row
+    chunks: int                  # device rows per logical row
+    slots: List[Slot]
+    dirty: bool = False
+    name: Optional[str] = None
+    _host: Optional[BitVector] = None
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.slots)
+
+    @property
+    def device_bytes(self) -> int:
+        return self.n_slots * self.store.device.row_bytes
+
+    @property
+    def freed(self) -> bool:
+        return not self.slots
+
+    def get(self) -> BitVector:
+        return self.store.get(self)
+
+    def free(self) -> None:
+        self.store.free(self)
+
+    def __repr__(self):
+        nm = f" {self.name!r}" if self.name else ""
+        return (f"<ResidentBitVector{nm} n_bits={self.n_bits} "
+                f"slots={self.n_slots} dirty={self.dirty}>")
+
+
+class PimStore:
+    """put/get/free lifecycle for resident bitvectors on one device."""
+
+    def __init__(self, device: AmbitDevice,
+                 allocator: Optional[RowAllocator] = None,
+                 policy: str = STRIPED, scratch_rows: int = 4):
+        self.device = device
+        if allocator is None:
+            # Share the device's allocator: resident rows and raw
+            # device.alloc_rows() calls must draw from ONE free list, or
+            # the two would hand out the same physical rows.
+            if device._allocator is None:
+                device._allocator = RowAllocator.for_device(
+                    device, scratch_rows=scratch_rows, policy=policy)
+            allocator = device._allocator
+        else:
+            if device._allocator is not None and \
+                    device._allocator is not allocator:
+                raise AmbitError(
+                    "device already has a different RowAllocator "
+                    "(two allocators over one device hand out the same "
+                    "physical rows)")
+            device._allocator = allocator
+        self.allocator = allocator
+        self.policy = policy
+        # Host-traffic ledger: only put/get move data over the channel.
+        self.host_writes = 0
+        self.host_reads = 0
+        self.bytes_to_device = 0
+        self.bytes_from_device = 0
+        self.migrated_rows = 0
+
+    # -- layout --------------------------------------------------------------
+
+    @staticmethod
+    def _used32(n_bits: int, words32: int) -> int:
+        """Meaningful packed uint32 words: BitVector pads the trailing dim
+        to a VREG-lane multiple (bitvector.py), but only ceil(n_bits/32)
+        words carry data - the lane padding is zero by construction and is
+        not worth device rows."""
+        return min(words32, -(-n_bits // 32))
+
+    def _chunk(self, bv: BitVector) -> np.ndarray:
+        """Host BitVector -> (n_slots, device.words) uint64 row chunks."""
+        data32 = np.asarray(bv.data, np.uint32)
+        flat = data32.reshape(-1, data32.shape[-1])
+        used = self._used32(bv.n_bits, data32.shape[-1])
+        u64 = _to_u64(np.ascontiguousarray(flat[:, :used]))
+        w = self.device.words
+        pad = (-u64.shape[1]) % w
+        if pad:
+            u64 = np.concatenate(
+                [u64, np.zeros((u64.shape[0], pad), np.uint64)], axis=1)
+        return u64.reshape(-1, w)
+
+    def _unchunk(self, rows: np.ndarray, rbv: ResidentBitVector) -> BitVector:
+        n_rows = int(np.prod(rbv.shape)) if rbv.shape else 1
+        u64 = rows.reshape(n_rows, rbv.chunks * self.device.words)
+        used = self._used32(rbv.n_bits, rbv.words32)
+        u32 = np.ascontiguousarray(u64).view(np.uint32)[:, :used]
+        if used < rbv.words32:          # restore the host lane padding
+            u32 = np.concatenate(
+                [u32, np.zeros((n_rows, rbv.words32 - used), np.uint32)],
+                axis=1)
+        out = jnp.asarray(u32.reshape(rbv.shape + (rbv.words32,)))
+        return BitVector(_mask_tail(out, rbv.n_bits), rbv.n_bits)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def put(self, bv: BitVector, policy: Optional[str] = None,
+            near: Optional[Sequence[Slot]] = None,
+            name: Optional[str] = None) -> ResidentBitVector:
+        chunks = self._chunk(bv)
+        if len(chunks) == 0:
+            raise AmbitError("cannot make a zero-row bitvector resident")
+        if near is not None and len(near) == len(chunks):
+            # chunk-aligned affinity: chunk k lands in the subarray that
+            # holds chunk k of the neighbor, so corresponding rows of
+            # co-operating bitvectors share a subarray (the Section 5.2
+            # co-location contract) without any later migration.
+            slots = []
+            try:
+                for k in range(len(chunks)):
+                    slots.extend(self.allocator.alloc(
+                        1, policy=policy, near=[near[k]]))
+            except AmbitError:
+                self.allocator.free(slots)
+                raise
+        else:
+            slots = self.allocator.alloc(len(chunks), policy=policy,
+                                         near=near)
+        self.device.write(slots, chunks)
+        data32 = np.asarray(bv.data, np.uint32)
+        rbv = ResidentBitVector(
+            store=self, n_bits=bv.n_bits, shape=data32.shape[:-1],
+            words32=data32.shape[-1],
+            chunks=len(chunks) // max(1, int(np.prod(data32.shape[:-1]))),
+            slots=slots, dirty=False, name=name, _host=bv)
+        self.host_writes += 1
+        self.bytes_to_device += rbv.device_bytes
+        return rbv
+
+    def get(self, rbv: ResidentBitVector) -> BitVector:
+        self._check_live(rbv)
+        if not rbv.dirty and rbv._host is not None:
+            return rbv._host            # host copy is current: no traffic
+        rows = self.device.read(rbv.slots)
+        out = self._unchunk(rows.reshape(len(rbv.slots), self.device.words),
+                            rbv)
+        rbv._host = out
+        rbv.dirty = False
+        self.host_reads += 1
+        self.bytes_from_device += rbv.device_bytes
+        return out
+
+    def free(self, rbv: ResidentBitVector) -> None:
+        self._check_live(rbv)
+        self.allocator.free(rbv.slots)
+        rbv.slots = []
+        rbv._host = None
+
+    def _check_live(self, rbv: ResidentBitVector) -> None:
+        if rbv.freed:
+            raise AmbitError(f"use of freed resident bitvector {rbv!r}")
+        if rbv.store is not self:
+            raise AmbitError("resident bitvector belongs to another store")
+
+    # -- migration planner ---------------------------------------------------
+
+    def plan_migrations(self, operands: Sequence[ResidentBitVector]
+                        ) -> List[Tuple[ResidentBitVector, int, Slot]]:
+        """For each chunk index where the operands span subarrays, pick the
+        plurality subarray as the target and list (rbv, slot_index,
+        target_subarray_slot=(bank, sub, -1)) moves. Pure planning - no
+        device mutation (``colocate`` executes the plan)."""
+        moves: List[Tuple[ResidentBitVector, int, Slot]] = []
+        if not operands:
+            return moves
+        n = operands[0].n_slots
+        for rbv in operands:
+            self._check_live(rbv)
+            if rbv.n_slots != n:
+                raise AmbitError("operands must be chunk-aligned "
+                                 "(same n_bits and shape)")
+        for i in range(n):
+            homes = [(r.slots[i][0], r.slots[i][1]) for r in operands]
+            if len(set(homes)) == 1:
+                continue
+            counts: Dict[Tuple[int, int], int] = {}
+            for h in homes:
+                counts[h] = counts.get(h, 0) + 1
+            best = max(counts.values())
+            # plurality target; ties break to the first operand's home
+            target = next(h for h in homes if counts[h] == best)
+            for rbv, h in zip(operands, homes):
+                if h != target:
+                    moves.append((rbv, i, (target[0], target[1], -1)))
+        return moves
+
+    def colocate(self, operands: Sequence[ResidentBitVector]) -> int:
+        """Execute the migration plan: move spanning chunks into the target
+        subarray via RowClone-PSM / channel copy (device-ledger cost).
+        Best-effort: a full target subarray leaves that chunk in place (the
+        planner will stage it through scratch at execution time). Returns
+        the number of rows migrated."""
+        moved = 0
+        for rbv, i, (tb, ts, _) in self.plan_migrations(operands):
+            try:
+                (new_slot,) = self.allocator.alloc_in(tb, ts, 1)
+            except AmbitError:
+                continue
+            self.device.migrate_row(rbv.slots[i], new_slot)
+            self.allocator.free([rbv.slots[i]])
+            rbv.slots[i] = new_slot
+            moved += 1
+        self.migrated_rows += moved
+        return moved

@@ -1,0 +1,344 @@
+"""PIM runtime subsystem: RowAllocator invariants, PimStore lifecycle /
+dirty tracking / migration, QueryPlanner differential equivalence against
+op-by-op engine evaluation, and AmbitRuntime session accounting.
+
+Property tests run under hypothesis when installed (requirements-dev.txt
+pins it); without it they fall back to deterministic seeded sweeps over
+the same generators, so collection never fails and coverage is preserved.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (AmbitError, BitVector, BulkBitwiseEngine,
+                        DRAMGeometry, Expr, maj)
+from repro.core.engine import OpStats
+from repro.core.simulator import AmbitDevice
+from repro.pim import (AmbitRuntime, COLOCATED, PimStore, RowAllocator,
+                       STRIPED)
+
+GEOM = DRAMGeometry(rows_per_subarray=32)  # 14 data rows: compact devices
+RNG = np.random.default_rng(11)
+
+
+# -- RowAllocator invariants --------------------------------------------------
+
+
+def test_striped_matches_seed_bump_cursor_order():
+    """Until something is freed, striped allocation must reproduce the seed
+    bump cursor exactly (banks fastest, then subarrays, then rows)."""
+    alloc = RowAllocator(banks=3, subarrays=2, data_rows=4)
+    got = alloc.alloc(3 * 2 * 4)
+    want = [(i % 3, (i // 3) % 2, i // 6) for i in range(3 * 2 * 4)]
+    assert got == want
+    with pytest.raises(AmbitError, match="full"):
+        alloc.alloc(1)
+
+
+def test_colocated_fills_subarray_first():
+    alloc = RowAllocator(banks=2, subarrays=2, data_rows=4,
+                         policy=COLOCATED)
+    assert alloc.alloc(5) == [(0, 0, 0), (0, 0, 1), (0, 0, 2), (0, 0, 3),
+                              (0, 1, 0)]
+
+
+def test_freed_slots_are_reused_lowest_first():
+    alloc = RowAllocator(banks=1, subarrays=1, data_rows=8)
+    slots = alloc.alloc(6)
+    alloc.free([slots[4], slots[1]])
+    assert alloc.alloc(3) == [(0, 0, 1), (0, 0, 4), (0, 0, 6)]
+
+
+def test_double_free_and_foreign_free_raise():
+    alloc = RowAllocator(banks=1, subarrays=1, data_rows=4)
+    (slot,) = alloc.alloc(1)
+    alloc.free([slot])
+    with pytest.raises(AmbitError, match="non-live"):
+        alloc.free([slot])
+    with pytest.raises(AmbitError, match="non-live"):
+        alloc.free([(0, 0, 3)])
+
+
+def test_failed_alloc_rolls_back():
+    alloc = RowAllocator(banks=1, subarrays=2, data_rows=2)
+    alloc.alloc(3)
+    with pytest.raises(AmbitError, match="full"):
+        alloc.alloc(2)          # only 1 slot left
+    assert alloc.free_slots == 1  # the partial grab was rolled back
+    assert alloc.alloc(1) == [(0, 1, 1)]
+
+
+def test_scratch_reservation_shrinks_capacity():
+    alloc = RowAllocator(banks=1, subarrays=1, data_rows=8, scratch_rows=3)
+    assert alloc.capacity == 5
+    rows = {r for (_, _, r) in alloc.alloc(5)}
+    assert rows == {0, 1, 2, 3, 4}  # top 3 rows never handed out
+    with pytest.raises(AmbitError, match="full"):
+        alloc.alloc(1)
+
+
+def test_near_affinity_prefers_neighbor_subarray():
+    alloc = RowAllocator(banks=2, subarrays=2, data_rows=8)
+    a = alloc.alloc(4)                      # one slot in each subarray
+    got = alloc.alloc(2, near=[a[3]])       # affinity to (1, 1)
+    assert [(b, s) for (b, s, _) in got] == [(1, 1), (1, 1)]
+
+
+def test_occupancy_tracking():
+    alloc = RowAllocator(banks=2, subarrays=1, data_rows=4)
+    slots = alloc.alloc(5)
+    assert alloc.occupancy(0, 0) == 3 and alloc.occupancy(1, 0) == 2
+    alloc.free(slots[:2])
+    assert alloc.occupancy(0, 0) + alloc.occupancy(1, 0) == 3
+    assert alloc.live == 3
+
+
+def check_allocator_invariants(ops_seed):
+    """Random alloc/free interleavings: no live slot is ever handed out
+    twice, frees return capacity, and exhaustion raises AmbitError."""
+    rng = np.random.default_rng(ops_seed)
+    alloc = RowAllocator(banks=2, subarrays=2, data_rows=6,
+                         scratch_rows=1)
+    live = set()
+    for _ in range(200):
+        if live and rng.integers(3) == 0:
+            victims = list(live)[:int(rng.integers(1, len(live) + 1))]
+            alloc.free(victims)
+            live -= set(victims)
+        else:
+            n = int(rng.integers(1, 5))
+            policy = (STRIPED, COLOCATED)[int(rng.integers(2))]
+            try:
+                got = alloc.alloc(n, policy=policy)
+            except AmbitError:
+                assert alloc.free_slots < n
+                continue
+            for slot in got:
+                assert slot not in live, "double allocation"
+                assert slot[2] < alloc.usable_rows
+                live.add(slot)
+        assert alloc.live == len(live)
+        assert alloc.free_slots == alloc.capacity - len(live)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def test_allocator_invariants_random(ops_seed):
+        check_allocator_invariants(ops_seed)
+
+else:
+
+    @pytest.mark.parametrize("ops_seed", range(25))
+    def test_allocator_invariants_random(ops_seed):
+        check_allocator_invariants(ops_seed)
+
+
+# -- PimStore lifecycle -------------------------------------------------------
+
+
+def _store(**kw):
+    dev = AmbitDevice(GEOM, banks=2, subarrays=2, words=2, seed=3)
+    return PimStore(dev, scratch_rows=kw.pop("scratch_rows", 2), **kw)
+
+
+@pytest.mark.parametrize("n_bits", [1, 127, 128, 129, 700])
+def test_put_get_roundtrip(n_bits):
+    store = _store()
+    bits = RNG.integers(0, 2, n_bits).astype(bool)
+    rbv = store.put(BitVector.from_bits(bits))
+    got = np.asarray(store.get(rbv).bits())
+    assert np.array_equal(got, bits)
+
+
+def test_put_get_roundtrip_batched_rows():
+    store = _store()
+    bits = RNG.integers(0, 2, (3, 200)).astype(bool)
+    rbv = store.put(BitVector.from_bits(bits))
+    assert rbv.shape == (3,)
+    assert np.array_equal(np.asarray(store.get(rbv).bits()), bits)
+
+
+def test_get_clean_is_free_dirty_costs():
+    store = _store()
+    bits = RNG.integers(0, 2, 300).astype(bool)
+    rbv = store.put(BitVector.from_bits(bits))
+    assert not rbv.dirty
+    base_reads = store.host_reads
+    store.get(rbv)                       # clean: cached host copy
+    assert store.host_reads == base_reads
+    rbv.dirty = True                     # simulate a device-side write
+    rbv._host = None
+    store.get(rbv)
+    assert store.host_reads == base_reads + 1
+    assert not rbv.dirty                 # read-back cleaned it
+
+
+def test_free_releases_rows_and_blocks_use():
+    store = _store()
+    rbv = store.put(BitVector.from_bits(RNG.integers(0, 2, 64).astype(bool)))
+    live_before = store.allocator.live
+    store.free(rbv)
+    assert store.allocator.live == live_before - rbv.chunks == 0
+    with pytest.raises(AmbitError, match="freed"):
+        store.get(rbv)
+    with pytest.raises(AmbitError, match="freed"):
+        store.free(rbv)
+
+
+def test_colocate_migrates_spanning_operands():
+    store = _store()
+    n_bits = 128  # one device row at words=2
+    a = store.put(BitVector.from_bits(RNG.integers(0, 2, n_bits).astype(bool)))
+    b = store.put(BitVector.from_bits(RNG.integers(0, 2, n_bits).astype(bool)))
+    assert a.slots[0][:2] != b.slots[0][:2]  # striped: different subarrays
+    host_b = np.asarray(store.get(b).bits())
+    ns_before = store.device.total_stats().ns
+    moved = store.colocate([a, b])
+    assert moved == 1
+    assert a.slots[0][:2] == b.slots[0][:2]
+    assert store.device.total_stats().ns > ns_before  # PSM cost charged
+    b.dirty, b._host = True, None       # force a device read
+    assert np.array_equal(np.asarray(store.get(b).bits()), host_b)
+
+
+def test_put_near_aligns_chunks():
+    store = _store()
+    bits = RNG.integers(0, 2, (2, 600)).astype(bool)
+    a = store.put(BitVector.from_bits(bits[0]))
+    b = store.put(BitVector.from_bits(bits[1]), near=a.slots)
+    assert [s[:2] for s in a.slots] == [s[:2] for s in b.slots]
+    assert store.colocate([a, b]) == 0
+
+
+# -- QueryPlanner differential equivalence ------------------------------------
+
+
+X, Y, Z = Expr.var("x"), Expr.var("y"), Expr.var("z")
+
+
+def rand_expr(rng, depth=0):
+    if depth > 3 or rng.integers(2):
+        return (X, Y, Z)[rng.integers(3)]
+    op = ("and", "or", "xor", "not", "maj")[rng.integers(5)]
+    if op == "not":
+        return ~rand_expr(rng, depth + 1)
+    if op == "maj":
+        return maj(rand_expr(rng, depth + 1), rand_expr(rng, depth + 1),
+                   rand_expr(rng, depth + 1))
+    a, b = rand_expr(rng, depth + 1), rand_expr(rng, depth + 1)
+    return {"and": a & b, "or": a | b, "xor": a ^ b}[op]
+
+
+def check_planner_matches_engine(seed, policy):
+    """Planner output over resident operands is bit-identical to op-free
+    engine evaluation of the same expression on the host."""
+    rng = np.random.default_rng(seed)
+    expr = rand_expr(rng)
+    if expr.op in ("var", "lit"):
+        expr = expr ^ Y            # ensure at least one op
+    n_bits = int(rng.integers(1, 700))
+    bits = rng.integers(0, 2, (3, n_bits)).astype(bool)
+    env_host = {k: BitVector.from_bits(bits[i])
+                for i, k in enumerate("xyz")}
+    want = np.asarray(BulkBitwiseEngine("ambit_sim").eval(
+        expr, env_host).bits())
+    jnp_got = np.asarray(BulkBitwiseEngine("jnp").eval(
+        expr, env_host).bits())
+
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                      policy=policy, seed=seed % 7)
+    env = {k: rt.put(v) for k, v in env_host.items()}
+    out = rt.eval(expr, env)
+    assert out.dirty
+    got = np.asarray(rt.get(out).bits())
+    assert np.array_equal(got, want), (repr(expr), n_bits, policy)
+    assert np.array_equal(got, jnp_got)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**32 - 1),
+           st.sampled_from([STRIPED, COLOCATED]))
+    def test_planner_matches_engine_random(seed, policy):
+        check_planner_matches_engine(seed, policy)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(10))
+    @pytest.mark.parametrize("policy", [STRIPED, COLOCATED])
+    def test_planner_matches_engine_random(seed, policy):
+        check_planner_matches_engine(seed, policy)
+
+
+def test_planner_rejects_misaligned_operands():
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2)
+    a = rt.put(BitVector.from_bits(RNG.integers(0, 2, 64).astype(bool)))
+    b = rt.put(BitVector.from_bits(RNG.integers(0, 2, 600).astype(bool)))
+    with pytest.raises(ValueError, match="row-aligned"):
+        rt.eval(X & Y, {"x": a, "y": b})
+
+
+def test_runtime_rejects_host_operands():
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2)
+    a = rt.put(BitVector.from_bits(RNG.integers(0, 2, 64).astype(bool)))
+    with pytest.raises(TypeError, match="resident"):
+        rt.eval(X & Y, {"x": a, "y": BitVector.zeros(64)})
+
+
+def test_planner_reports_bank_parallel_time():
+    """Independent row groups on different banks overlap: reported time is
+    the max over banks, energy the sum (Fig. 21 accounting)."""
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=1, words=2, colocate=False)
+    n_bits = 4 * 128            # 4 chunks striped over 2 banks
+    bits = RNG.integers(0, 2, (2, n_bits)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    rt.and_(a, b)
+    rep = rt.planner.last_report
+    assert rep.groups == 2 and len(rep.per_bank_ns) == 2
+    per_bank = list(rep.per_bank_ns.values())
+    assert rep.stats.ns == pytest.approx(max(per_bank))
+    assert sum(per_bank) > rep.stats.ns  # parallelism actually claimed
+
+
+def test_runtime_session_accounting():
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2)
+    bits = RNG.integers(0, 2, (2, 500)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    upload = rt.session_stats.bytes_touched
+    assert upload == a.device_bytes + b.device_bytes
+    out = rt.xor(a, b)
+    assert rt.session_stats.bytes_touched == upload  # eval: no host bytes
+    assert rt.session_stats.ns > 0
+    got = np.asarray(rt.get(out).bits())
+    assert np.array_equal(got, bits[0] ^ bits[1])
+    assert rt.session_stats.bytes_touched == upload + out.device_bytes
+    rt.get(out)                  # clean: no extra traffic
+    assert rt.session_stats.bytes_touched == upload + out.device_bytes
+
+
+def test_opstats_merge_accumulates_all_fields():
+    a = OpStats(ns=1.0, energy_nj=2.0, aap_count=3, bytes_touched=4)
+    a += OpStats(ns=10.0, energy_nj=20.0, aap_count=30, bytes_touched=40)
+    assert (a.ns, a.energy_nj, a.aap_count, a.bytes_touched) == \
+        (11.0, 22.0, 33, 44)
+
+
+def test_device_alloc_rows_shim_free_and_reuse():
+    """The back-compat shim supports free/realloc (the seed cursor could
+    only run out)."""
+    dev = AmbitDevice(GEOM, banks=2, subarrays=2, words=2)
+    slots = dev.alloc_rows(6)
+    dev.free_rows(slots[:3])
+    again = dev.alloc_rows(3)
+    assert sorted(again) == sorted(slots[:3])
