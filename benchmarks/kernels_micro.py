@@ -120,6 +120,63 @@ def pim_resident_chain(n_ops: int = 6, rows: int = 128) -> List[Row]:
              f"host_wall={us_host:.0f}us")]
 
 
+def pim_sharded_scan(n_ops: int = 6, rows: int = 64,
+                     devices: int = 4) -> List[Row]:
+    """Sharded multi-device scaling: the same ``n_ops``-AND resident chain
+    over a batch of ``rows`` row-sized (65,536-bit) bitvectors, on one
+    device vs a ``devices``-device PimCluster with round-robin chunk
+    placement. Chunks stripe across devices, so each device executes
+    1/devices of every op and the cluster planner reports
+    max-over-devices time - near-linear scaling as long as operands stay
+    chunk-aligned (the ``near=`` chain guarantees that, so the chain pays
+    ZERO inter-device transfers). The kernel then ANDs in one
+    deliberately mis-placed operand (packed onto device 0): the cluster's
+    cross-device colocation moves its chunks, and the ledger records the
+    **measured** inter-device rows/bytes plus the channel ns the move
+    re-introduced - the traffic the paper's single-chip story never
+    sees."""
+    from repro.core import BitVector
+    from repro.pim import AmbitRuntime, PACKED
+
+    rng = np.random.default_rng(0)
+    n_bits = 65536  # one full 8 KB DRAM row per logical row
+    bits = rng.integers(0, 2, (n_ops + 1, rows, n_bits)).astype(bool)
+    vecs = [BitVector.from_bits(b) for b in bits]
+
+    def chain(n_devices):
+        rt = AmbitRuntime(banks=4, subarrays=2, devices=n_devices, seed=1)
+        rs = []
+        for bv in vecs:
+            rs.append(rt.put(bv, near=rs[0].slots if rs else None))
+        acc = rs[0]
+        for r in rs[1:]:
+            prev = acc
+            acc = rt.and_(acc, r)
+            if prev is not rs[0]:
+                rt.free(prev)
+        rt.get(acc)
+        return rt, acc
+
+    us_1 = _time(lambda: chain(1), reps=1)
+    us_n = _time(lambda: chain(devices), reps=1)
+    (rt1, _), (rtn, acc) = chain(1), chain(devices)
+    ns_1, ns_n = rt1.session_stats.ns, rtn.session_stats.ns
+    assert rtn.store.ledger.inter_device_bytes == 0  # aligned chain: free
+
+    # Mis-placed operand: packed onto one device, colocated on first use.
+    mask = rtn.store.put(BitVector.from_bits(bits[0]), placement=PACKED)
+    rtn.and_(acc, mask)
+    led = rtn.store.ledger
+    return [("kern_pim_sharded_scan", us_n,
+             f"devices={devices} ops={n_ops} rows={rows} "
+             f"dram_speedup={ns_1 / ns_n:.1f}x "
+             f"({ns_1:.0f} vs {ns_n:.0f} ns) "
+             f"misplaced_op: inter_dev_rows={led.inter_device_rows} "
+             f"bytes={led.inter_device_bytes} (measured) "
+             f"channel_ns={led.inter_device_ns:.0f} "
+             f"single_dev_wall={us_1:.0f}us")]
+
+
 def kernels_micro() -> List[Row]:
     from repro.core import expr as E
     from repro.kernels import ops, ref
@@ -127,6 +184,7 @@ def kernels_micro() -> List[Row]:
     rows: List[Row] = []
     rows.extend(ambit_batched_speedup())
     rows.extend(pim_resident_chain())
+    rows.extend(pim_sharded_scan())
     rng = np.random.default_rng(0)
     shape = (256, 4096)  # 4 MB packed = 128 Mbit operands
     nbytes = int(np.prod(shape)) * 4

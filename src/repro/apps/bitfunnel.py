@@ -8,7 +8,11 @@ AND over thousands of documents per word is exactly Ambit's sweet spot.
 
 With an ``AmbitRuntime``, the filter rows are uploaded once (``freeze``)
 and every query lowers as a single AND tree over the resident rows - the
-term count no longer multiplies host traffic.
+term count no longer multiplies host traffic. A multi-device runtime
+shards the rows across the cluster (the ``near=`` chain keeps them
+chunk-aligned, so query ANDs stay on-device); cold rows LRU-spill on a
+full device and fault back in at query time, and ``freeze(pin=True)``
+exempts the filter from eviction entirely.
 """
 
 from __future__ import annotations
@@ -52,9 +56,11 @@ class BitFunnelIndex:
 
     # -- resident lifecycle --------------------------------------------------
 
-    def freeze(self) -> None:
+    def freeze(self, pin: bool = False) -> None:
         """Upload every non-empty filter row to the device (idempotent).
-        Queries then run fully resident until the next add_document."""
+        Queries then run fully resident until the next add_document.
+        ``pin=True`` exempts the rows from LRU eviction (use when the
+        device is shared and the filter must stay hot)."""
         if self.runtime is None:
             raise ValueError("freeze() needs an AmbitRuntime")
         if self._resident:
@@ -62,9 +68,9 @@ class BitFunnelIndex:
         near = None
         for r in np.nonzero(self._rows.any(axis=1))[0]:
             rbv = self.runtime.put(BitVector.from_bits(self._rows[r]),
-                                   name=f"bloom{r}", near=near)
+                                   name=f"bloom{r}", near=near, pin=pin)
             self._resident[int(r)] = rbv
-            near = rbv.slots
+            near = rbv.slots if rbv.slots else near
 
     def thaw(self) -> None:
         """Free the resident copy (after index mutation)."""

@@ -14,6 +14,13 @@ Two execution paths:
   * resident - pass an ``AmbitRuntime``: bitmaps are uploaded once at
     ``add`` time, whole queries lower as one expression tree through the
     placement-aware planner, and only the final popcount reads data back.
+    A multi-device runtime (``AmbitRuntime(devices=N)``) shards each
+    bitmap across the cluster; the ``near=`` chain keeps corresponding
+    chunks of co-queried bitmaps on the same device, so queries pay no
+    inter-device transfers. On a full device the LRU spills cold bitmaps
+    to host (free when clean) and queries fault them back in on demand;
+    ``pin_bitmaps=True`` exempts the index's bitmaps from eviction when
+    the device is shared with other tenants.
 """
 
 from __future__ import annotations
@@ -29,13 +36,14 @@ from ..core.engine import OpStats
 class BitmapIndex:
     def __init__(self, n_users: int,
                  engine: Optional[BulkBitwiseEngine] = None,
-                 runtime=None):
+                 runtime=None, pin_bitmaps: bool = False):
         if (engine is None) == (runtime is None):
             raise ValueError("pass exactly one of engine= (host path) or "
                              "runtime= (resident path)")
         self.n_users = n_users
         self.engine = engine
         self.runtime = runtime
+        self.pin_bitmaps = pin_bitmaps
         self.bitmaps: Dict[str, BitVector] = {}
         self.resident: Dict[str, object] = {}  # name -> ResidentBitVector
 
@@ -46,10 +54,12 @@ class BitmapIndex:
         if self.runtime is not None:
             if name in self.resident:   # drop BEFORE picking a neighbor:
                 self.runtime.free(self.resident.pop(name))
-            # co-locate with already-loaded bitmaps: queries AND across them
+            # co-locate with already-loaded bitmaps: queries AND across
+            # them (spilled neighbors hold no rows - skip them)
             near = next((r.slots for r in self.resident.values()
                          if r.slots), None)
-            self.resident[name] = self.runtime.put(bv, name=name, near=near)
+            self.resident[name] = self.runtime.put(
+                bv, name=name, near=near, pin=self.pin_bitmaps)
         else:
             self.bitmaps[name] = bv
 

@@ -87,7 +87,8 @@ def scan_expr(bits: int, c1: int, c2: int):
 
 
 def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
-                        runtime, keep_resident: bool = False):
+                        runtime, keep_resident: bool = False,
+                        pin_planes: bool = False):
     """Run the scan fully resident: planes are uploaded once, the whole
     predicate executes in-DRAM as one planner call, and only the selection
     bitvector is read back for the popcount. Returns (count, OpStats,
@@ -95,7 +96,13 @@ def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
     when ``keep_resident`` (caller frees it), else None.
 
     Planes stay resident across calls (cached on the column), so repeated
-    scans with different constants pay zero upload traffic."""
+    scans with different constants pay zero upload traffic. On a full
+    device cold planes LRU-spill to host (free - they are clean) and the
+    next scan faults them back in, charged to that scan's ledger;
+    ``pin_planes=True`` exempts them from eviction. Sharded runtimes
+    (``AmbitRuntime(devices=N)``) split every plane across devices; the
+    ``near=`` chain keeps corresponding chunks co-resident, so the whole
+    predicate still runs without inter-device transfers."""
     from ..core.engine import OpStats
 
     total = OpStats()
@@ -108,10 +115,10 @@ def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
         planes = []
         for i in range(col.bits):
             rbv = runtime.put(BitVector(col.planes[i], col.n_rows),
-                              name=f"p{i}", near=near)
+                              name=f"p{i}", near=near, pin=pin_planes)
             total += runtime.last_stats
             planes.append(rbv)
-            near = rbv.slots
+            near = rbv.slots if rbv.slots else near
         col._resident_planes = resident = (runtime, planes)
     env = {f"p{i}": rbv for i, rbv in enumerate(resident[1])}
     out = runtime.eval(scan_expr(col.bits, int(c1), int(c2)), env)

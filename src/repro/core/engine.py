@@ -52,12 +52,22 @@ from .timing import DEFAULT_TIMING, CommandStats, TimingParams
 
 @dataclasses.dataclass
 class OpStats:
-    """Per-call accounting (DRAM model units when backend=ambit_sim)."""
+    """Per-call accounting (DRAM model units when backend=ambit_sim).
+
+    ``bytes_touched`` is host<->device traffic; ``channel_bytes`` /
+    ``channel_ns`` are *inter-device* transfers on a multi-device
+    cluster (pim.cluster) - measured from rows actually moved, never
+    from an analytic formula. ``channel_ns`` is already included in
+    ``ns`` (transfers serialize before the device programs run); the
+    separate field exists so callers can see how much of the critical
+    path the channel re-introduced."""
 
     ns: float = 0.0
     energy_nj: float = 0.0
     aap_count: int = 0
     bytes_touched: int = 0
+    channel_ns: float = 0.0
+    channel_bytes: int = 0
 
     def merge(self, other: "OpStats") -> "OpStats":
         """Accumulate another ledger into this one (all fields - callers
@@ -67,6 +77,8 @@ class OpStats:
         self.energy_nj += other.energy_nj
         self.aap_count += other.aap_count
         self.bytes_touched += other.bytes_touched
+        self.channel_ns += other.channel_ns
+        self.channel_bytes += other.channel_bytes
         return self
 
     def __iadd__(self, other: "OpStats") -> "OpStats":

@@ -3,16 +3,27 @@ query planning over the Ambit device model.
 
   RowAllocator                 - free-list (bank, subarray, row) allocation
   PimStore / ResidentBitVector - bitvectors living in simulated DRAM
+                                 (LRU spill/eviction when the device fills)
   QueryPlanner                 - whole-Expr batched AAP scheduling
+  PimCluster / ClusterBitVector- N devices behind one store API: sharded
+                                 placement, channel cost model, cross-device
+                                 colocation, per-device sub-plans
   AmbitRuntime                 - the session API applications use
+                                 (devices=N shards across a cluster)
 """
 
 from .allocator import COLOCATED, POLICIES, RowAllocator, STRIPED, Slot
+from .cluster import (AFFINITY, ChannelLedger, ChannelModel, CLUSTER_POLICIES,
+                      ClusterBitVector, ClusterPlanner, ClusterReport,
+                      PACKED, PimCluster, ROUND_ROBIN)
 from .planner import PlanReport, QueryPlanner
 from .runtime import AmbitRuntime
 from .store import PimStore, ResidentBitVector
 
 __all__ = [
-    "AmbitRuntime", "COLOCATED", "PimStore", "PlanReport", "POLICIES",
-    "QueryPlanner", "ResidentBitVector", "RowAllocator", "STRIPED", "Slot",
+    "AFFINITY", "AmbitRuntime", "COLOCATED", "ChannelLedger", "ChannelModel",
+    "CLUSTER_POLICIES", "ClusterBitVector", "ClusterPlanner", "ClusterReport",
+    "PACKED", "PimCluster", "PimStore", "PlanReport", "POLICIES",
+    "QueryPlanner", "ResidentBitVector", "ROUND_ROBIN", "RowAllocator",
+    "STRIPED", "Slot",
 ]

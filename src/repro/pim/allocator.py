@@ -92,6 +92,18 @@ class RowAllocator:
     def free_slots(self) -> int:
         return self.capacity - self.live
 
+    @property
+    def utilization(self) -> float:
+        """Fraction of usable rows currently live (the cluster placement
+        signal: packed/affinity policies pick the least-loaded device)."""
+        return self.live / self.capacity
+
+    def shortfall(self, n_rows: int) -> int:
+        """How many rows short of an ``n_rows`` allocation the device is
+        (0 = it fits). The spill loop evicts until this reaches zero
+        instead of probing with throwaway failed allocations."""
+        return max(0, n_rows - self.free_slots)
+
     def occupancy(self, bank: int, subarray: int) -> int:
         """Number of live slots in one subarray."""
         return self._occupancy[(bank, subarray)]

@@ -1,0 +1,628 @@
+"""PimCluster: N Ambit devices behind one PimStore-compatible API.
+
+A real deployment is a DIMM/rank hierarchy of many chips, not one
+``AmbitDevice`` - and cross-device operand movement reintroduces exactly
+the memory-channel traffic the paper eliminates (PAPER.md Section 8;
+Buddy-RAM makes the same multi-bank/chip parallelism argument). The
+cluster models that step:
+
+  * ``ChannelModel`` - per-hop ns/byte + fixed latency for the three
+    classes of movement: host<->device uploads/read-backs, inter-device
+    transfers (devices sit on a linear chain; cost scales with hop
+    count), and intra-device RowClone (charged by the device model
+    itself via ``AmbitDevice.migrate_row``; the model exposes the figure
+    for reference). Every transfer is *measured* - bytes come from rows
+    actually moved, never from an analytic formula - and lands in the
+    cluster's ``ChannelLedger`` and the per-call ``OpStats``.
+
+  * placement policies - ``round_robin`` stripes chunks across devices
+    (device-level parallelism: the planner reports max-over-devices
+    time), ``packed`` fills one device before spilling to the next, and
+    ``affinity`` co-shards operands that are used together: with
+    ``near=`` it follows the neighbor's chunk->device layout exactly,
+    without it the whole vector lands on the least-loaded device.
+
+  * ``colocate`` - cross-device migration planner: for each chunk whose
+    operands span devices it picks the cheapest migration direction from
+    the channel model (minimum total link cost over candidate target
+    devices) and moves the minority rows, so every op executes fully
+    on-device.
+
+  * ``ClusterPlanner`` - lowers ONE expression tree across shards:
+    cross-device colocation first (explicit, measured transfer ops),
+    then one per-device sub-plan through the existing ``QueryPlanner``
+    (subarray batching, scratch staging, per-bank ledgers). Devices run
+    independent chunk groups in parallel, so the reported time is the
+    max over devices plus the serialized channel time; energy and AAP
+    counts are summed.
+
+LRU spill works at cluster scope exactly as it does on ``PimStore``: a
+full device evicts the least-recently-used unpinned cluster handle that
+owns rows on it (clean handles spill for free, dirty ones are read back
+through the ledger first), and spilled handles fault back in via
+``ensure_resident``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..core import expr as E
+from ..core.engine import OpStats
+from ..core.simulator import AmbitDevice, AmbitError
+from ..core.geometry import DEFAULT_GEOMETRY, DRAMGeometry
+from ..core.timing import DEFAULT_TIMING, CommandStats, TimingParams
+from .allocator import STRIPED, Slot
+from .planner import QueryPlanner
+from .store import (LruSpillBase, PimStore, ResidentBitVector, chunk_rows,
+                    unchunk_rows)
+from ..core.bitvector import BitVector
+
+ROUND_ROBIN = "round_robin"
+PACKED = "packed"
+AFFINITY = "affinity"
+CLUSTER_POLICIES = (ROUND_ROBIN, PACKED, AFFINITY)
+
+DeviceSlot = Tuple[int, Slot]  # (device index, (bank, subarray, row))
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelModel:
+    """Per-hop cost model for data movement in the device hierarchy.
+
+    Devices sit on a linear chain (device i <-> device i+1 is one hop), so
+    an inter-device transfer costs ``fixed + hops * ns_per_byte * bytes``.
+    Host transfers cross the memory channel once regardless of target.
+    Intra-device RowClone is charged by ``AmbitDevice.migrate_row`` into
+    the device ledger; ``intra_device_ns`` reproduces that figure so the
+    three movement classes can be compared in one place."""
+
+    host_ns_per_byte: float = 1.0 / 34.0     # ~34 GB/s host memory channel
+    host_fixed_ns: float = 50.0
+    link_ns_per_byte: float = 1.0 / 16.0     # ~16 GB/s inter-device hop
+    link_fixed_ns: float = 100.0
+    nj_per_byte: float = 0.0449              # ~46 nJ/KB channel energy
+
+    def hops(self, src_dev: int, dst_dev: int) -> int:
+        return abs(src_dev - dst_dev)
+
+    def device_to_device_ns(self, src_dev: int, dst_dev: int,
+                            nbytes: int) -> float:
+        h = self.hops(src_dev, dst_dev)
+        if h == 0:
+            return 0.0
+        return self.link_fixed_ns + h * self.link_ns_per_byte * nbytes
+
+    def device_to_device_nj(self, src_dev: int, dst_dev: int,
+                            nbytes: int) -> float:
+        return self.hops(src_dev, dst_dev) * self.nj_per_byte * nbytes
+
+    def host_transfer_ns(self, nbytes: int) -> float:
+        return self.host_fixed_ns + self.host_ns_per_byte * nbytes
+
+    def intra_device_ns(self, row_bytes: int,
+                        timing: TimingParams = DEFAULT_TIMING) -> float:
+        """RowClone-PSM row copy (mirrors AmbitBank.psm_copy accounting)."""
+        from ..core.simulator import AmbitBank
+        n_lines = row_bytes // 64
+        return (2 * timing.tRAS + n_lines * AmbitBank.PSM_NS_PER_CACHELINE
+                + timing.tRP)
+
+
+DEFAULT_CHANNEL = ChannelModel()
+
+
+@dataclasses.dataclass
+class ChannelLedger:
+    """Measured data-movement ledger for one cluster (bytes counted from
+    rows actually transferred)."""
+
+    host_writes: int = 0
+    host_reads: int = 0
+    host_to_device_bytes: int = 0
+    device_to_host_bytes: int = 0
+    host_ns: float = 0.0
+    inter_device_rows: int = 0
+    inter_device_bytes: int = 0
+    inter_device_ns: float = 0.0
+    inter_device_nj: float = 0.0
+
+    def merge(self, other: "ChannelLedger") -> "ChannelLedger":
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
+
+
+@dataclasses.dataclass(eq=False)
+class ClusterBitVector:
+    """Handle to a bitvector sharded across cluster devices.
+    Handles compare (and hash) by identity.
+
+    ``slots[i]`` is the ``(device, (bank, subarray, row))`` home of chunk
+    ``i``; the chunk order is identical to ``ResidentBitVector.slots``
+    (logical-row-major, chunk-minor), so ``near=other.slots`` aligns
+    corresponding chunks across co-operating vectors."""
+
+    cluster: "PimCluster"
+    n_bits: int
+    shape: Tuple[int, ...]
+    words32: int
+    chunks: int                  # device rows per logical row
+    slots: List[DeviceSlot]
+    dirty: bool = False
+    pinned: bool = False
+    spilled: bool = False
+    name: Optional[str] = None
+    _host: Optional[BitVector] = None
+
+    @property
+    def n_slots(self) -> int:
+        return len(self.slots)
+
+    @property
+    def device_bytes(self) -> int:
+        return self.n_slots * self.cluster.row_bytes
+
+    @property
+    def devices(self) -> List[int]:
+        return sorted({d for d, _ in self.slots})
+
+    @property
+    def freed(self) -> bool:
+        return not self.slots and not self.spilled
+
+    def get(self) -> BitVector:
+        return self.cluster.get(self)
+
+    def free(self) -> None:
+        self.cluster.free(self)
+
+    def __repr__(self):
+        nm = f" {self.name!r}" if self.name else ""
+        flags = (" pinned" if self.pinned else "") + \
+            (" spilled" if self.spilled else "")
+        return (f"<ClusterBitVector{nm} n_bits={self.n_bits} "
+                f"slots={self.n_slots} devices={self.devices} "
+                f"dirty={self.dirty}{flags}>")
+
+
+class PimCluster(LruSpillBase):
+    """N AmbitDevices behind one PimStore-compatible put/get/free API."""
+
+    _handle_desc = "cluster bitvector"
+
+    def __init__(self, devices: int = 2,
+                 geometry: DRAMGeometry = DEFAULT_GEOMETRY,
+                 timing: TimingParams = DEFAULT_TIMING,
+                 banks: Optional[int] = None,
+                 subarrays: Optional[int] = None,
+                 words: Optional[int] = None,
+                 placement: str = ROUND_ROBIN,
+                 channel: Optional[ChannelModel] = None,
+                 policy: str = STRIPED, scratch_rows: int = 4,
+                 optimize: bool = True, colocate: bool = True,
+                 seed: int = 0):
+        if devices < 1:
+            raise ValueError("need at least one device")
+        if placement not in CLUSTER_POLICIES:
+            raise ValueError(
+                f"unknown placement {placement!r} (use {CLUSTER_POLICIES})")
+        self.devices = [
+            AmbitDevice(geometry, timing, banks=banks, subarrays=subarrays,
+                        words=words, seed=seed + 7919 * d)
+            for d in range(devices)]
+        # Per-device stores share each device's allocator and give the
+        # per-device QueryPlanners their staging/colocation machinery; the
+        # cluster itself owns placement, the LRU and the channel ledger.
+        self.stores = [PimStore(dev, policy=policy,
+                                scratch_rows=scratch_rows)
+                       for dev in self.devices]
+        self.allocators = [st.allocator for st in self.stores]
+        self.planners = [QueryPlanner(st, optimize=optimize,
+                                      colocate=colocate)
+                         for st in self.stores]
+        self.planner = ClusterPlanner(self)
+        self.placement = placement
+        self.channel = channel or DEFAULT_CHANNEL
+        self.ledger = ChannelLedger()
+        self.words = self.devices[0].words
+        self.row_bytes = self.devices[0].row_bytes
+        # PimStore-compatible host-traffic counters.
+        self.host_writes = 0
+        self.host_reads = 0
+        self.bytes_to_device = 0
+        self.bytes_from_device = 0
+        self._lru_init()
+        # Operands of an in-flight ClusterPlanner call: protected from
+        # eviction for its duration (set by ClusterPlanner.execute).
+        self._in_flight: Tuple[ClusterBitVector, ...] = ()
+        # A full device during a per-device sub-plan must be able to
+        # evict CLUSTER handles (they are registered here, not in the
+        # per-device store LRUs): install the cluster-scope fallback.
+        for d, st in enumerate(self.stores):
+            st.spill_fallback = \
+                (lambda d=d: self._evict_one(d, self._in_flight))
+
+    @property
+    def n_devices(self) -> int:
+        return len(self.devices)
+
+    @property
+    def migrated_rows(self) -> int:
+        """Intra-device subarray migrations (per-device store colocation)."""
+        return sum(st.migrated_rows for st in self.stores)
+
+    def total_stats(self) -> CommandStats:
+        agg = CommandStats()
+        for dev in self.devices:
+            agg.merge(dev.total_stats())
+        return agg
+
+    # -- placement -----------------------------------------------------------
+
+    def _place(self, n_chunks: int, placement: Optional[str],
+               near: Optional[Sequence[DeviceSlot]]) -> List[int]:
+        """chunk index -> device index, deterministically."""
+        placement = self.placement if placement is None else placement
+        if placement not in CLUSTER_POLICIES:
+            raise ValueError(f"unknown placement {placement!r}")
+        if near is not None and len(near) == n_chunks:
+            # chunk-aligned affinity: chunk k shares its neighbor's device
+            return [d for d, _ in near]
+        if placement == ROUND_ROBIN:
+            return [i % self.n_devices for i in range(n_chunks)]
+        if placement == PACKED:
+            free = [a.free_slots for a in self.allocators]
+            out = []
+            for _ in range(n_chunks):
+                d = next((i for i, f in enumerate(free) if f > 0), 0)
+                free[d] -= 1
+                out.append(d)
+            return out
+        # AFFINITY without a neighbor: whole vector on the least-loaded
+        # device, so vectors put near= each other later share it.
+        d = min(range(self.n_devices),
+                key=lambda i: (self.allocators[i].utilization, i))
+        return [d] * n_chunks
+
+    # -- LRU / eviction (machinery in LruSpillBase; cluster eviction
+    # spills the WHOLE vector - every device's chunks - so spilled
+    # handles are never half-resident) --------------------------------------
+
+    def _owner_of(self, cbv: ClusterBitVector):
+        return cbv.cluster
+
+    def _release_rows(self, cbv: ClusterBitVector) -> None:
+        by_dev: Dict[int, List[Slot]] = {}
+        for d, s in cbv.slots:
+            by_dev.setdefault(d, []).append(s)
+        for d in sorted(by_dev):
+            self.allocators[d].free(by_dev[d])
+        cbv.slots = []
+
+    def _evict_one(self, d: int,
+                   protect: Iterable[ClusterBitVector]) -> bool:
+        """Spill the LRU unpinned handle owning rows on device ``d``."""
+        protected = {id(p) for p in protect}
+        for cbv in list(self._lru.values()):
+            if cbv.pinned or id(cbv) in protected or not cbv.slots:
+                continue
+            if all(dd != d for dd, _ in cbv.slots):
+                continue
+            self.spill(cbv)
+            return True
+        return False
+
+    def _alloc_on(self, d: int, n_rows: int,
+                  near: Optional[Sequence[Slot]] = None,
+                  protect: Iterable[ClusterBitVector] = ()) -> List[Slot]:
+        alloc = self.allocators[d]
+        while alloc.shortfall(n_rows):
+            if not self._evict_one(d, protect):
+                raise AmbitError(
+                    f"cluster device {d} full ({alloc.live}/"
+                    f"{alloc.capacity} rows live) and every resident "
+                    f"bitvector on it is pinned or in use")
+        return alloc.alloc(n_rows, near=near)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def put(self, bv: BitVector, placement: Optional[str] = None,
+            near: Optional[Sequence[DeviceSlot]] = None,
+            name: Optional[str] = None,
+            pin: bool = False) -> ClusterBitVector:
+        chunks = chunk_rows(bv, self.words)
+        if len(chunks) == 0:
+            raise AmbitError("cannot make a zero-row bitvector resident")
+        devmap = self._place(len(chunks), placement, near)
+        aligned = near is not None and len(near) == len(chunks)
+        slots: List[Optional[DeviceSlot]] = [None] * len(chunks)
+        try:
+            for d in sorted(set(devmap)):
+                idxs = [i for i, dd in enumerate(devmap) if dd == d]
+                if aligned:
+                    # chunk-aligned: each chunk lands in the subarray that
+                    # holds the neighbor's corresponding chunk.
+                    for i in idxs:
+                        (s,) = self._alloc_on(d, 1, near=[near[i][1]])
+                        slots[i] = (d, s)
+                else:
+                    got = self._alloc_on(d, len(idxs))
+                    for i, s in zip(idxs, got):
+                        slots[i] = (d, s)
+                self.devices[d].write([slots[i][1] for i in idxs],
+                                      chunks[idxs])
+        except AmbitError:
+            for ds in slots:
+                if ds is not None:
+                    self.allocators[ds[0]].free([ds[1]])
+            raise
+        data32 = np.asarray(bv.data, np.uint32)
+        cbv = ClusterBitVector(
+            cluster=self, n_bits=bv.n_bits, shape=data32.shape[:-1],
+            words32=data32.shape[-1],
+            chunks=len(chunks) // max(1, int(np.prod(data32.shape[:-1]))),
+            slots=slots, dirty=False, pinned=pin, name=name, _host=bv)
+        nbytes = cbv.device_bytes
+        self.host_writes += 1
+        self.bytes_to_device += nbytes
+        self.ledger.host_writes += 1
+        self.ledger.host_to_device_bytes += nbytes
+        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        self._register(cbv)
+        return cbv
+
+    def _read_back(self, cbv: ClusterBitVector) -> BitVector:
+        rows = np.empty((cbv.n_slots, self.words), np.uint64)
+        by_dev: Dict[int, List[int]] = {}
+        for i, (d, _) in enumerate(cbv.slots):
+            by_dev.setdefault(d, []).append(i)
+        for d in sorted(by_dev):
+            idxs = by_dev[d]
+            rows[idxs] = self.devices[d].read(
+                [cbv.slots[i][1] for i in idxs])
+        out = unchunk_rows(rows, cbv.n_bits, cbv.shape, cbv.words32,
+                           self.words)
+        cbv._host = out
+        cbv.dirty = False
+        nbytes = cbv.device_bytes
+        self.host_reads += 1
+        self.bytes_from_device += nbytes
+        self.ledger.host_reads += 1
+        self.ledger.device_to_host_bytes += nbytes
+        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        return out
+
+    def ensure_resident(self, cbv: ClusterBitVector,
+                        protect: Iterable[ClusterBitVector] = ()
+                        ) -> ClusterBitVector:
+        """Fault a spilled handle back in (fresh upload, default
+        placement). Live handles just refresh recency."""
+        self._check_handle(cbv)
+        if not cbv.spilled:
+            self._touch(cbv)
+            return cbv
+        chunks = chunk_rows(cbv._host, self.words)
+        devmap = self._place(len(chunks), None, None)
+        slots: List[Optional[DeviceSlot]] = [None] * len(chunks)
+        try:
+            for d in sorted(set(devmap)):
+                idxs = [i for i, dd in enumerate(devmap) if dd == d]
+                got = self._alloc_on(d, len(idxs),
+                                     protect=(cbv, *protect))
+                for i, s in zip(idxs, got):
+                    slots[i] = (d, s)
+                self.devices[d].write([slots[i][1] for i in idxs],
+                                      chunks[idxs])
+        except AmbitError:
+            for ds in slots:
+                if ds is not None:
+                    self.allocators[ds[0]].free([ds[1]])
+            raise
+        cbv.slots = slots
+        cbv.spilled = False
+        cbv.dirty = False
+        nbytes = cbv.device_bytes
+        self.host_writes += 1
+        self.bytes_to_device += nbytes
+        self.ledger.host_writes += 1
+        self.ledger.host_to_device_bytes += nbytes
+        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        self._register(cbv)
+        return cbv
+
+    # -- cross-device migration ----------------------------------------------
+
+    def colocate(self, operands: Sequence[ClusterBitVector]) -> int:
+        """Unify each chunk's operands onto one device, picking the
+        cheapest migration direction from the channel model (minimum
+        total link cost over the candidate target devices; ties break to
+        the lowest device index). Transfers are executed immediately and
+        measured into the ChannelLedger. Returns rows moved."""
+        if not operands:
+            return 0
+        n = operands[0].n_slots
+        for cbv in operands:
+            self._check_live(cbv)
+            if cbv.n_slots != n:
+                raise AmbitError("operands must be chunk-aligned "
+                                 "(same n_bits and shape)")
+        moved = 0
+        rb = self.row_bytes
+        for i in range(n):
+            homes = [cbv.slots[i][0] for cbv in operands]
+            if len(set(homes)) == 1:
+                continue
+            def cost(t):
+                return sum(self.channel.device_to_device_ns(h, t, rb)
+                           for h in homes if h != t)
+            targets = sorted(set(homes), key=lambda t: (cost(t), t))
+            last_err = None
+            for target in targets:
+                try:
+                    moved += self._migrate_chunk(operands, i, homes, target)
+                    break
+                except AmbitError as e:     # target full: next-cheapest
+                    last_err = e
+            else:
+                raise AmbitError(
+                    f"cannot colocate chunk {i}: every candidate device "
+                    f"is full ({last_err})")
+        return moved
+
+    def _migrate_chunk(self, operands: Sequence[ClusterBitVector], i: int,
+                       homes: List[int], target: int) -> int:
+        """Move chunk ``i`` of every operand not on ``target`` there."""
+        anchor = next((cbv.slots[i][1] for cbv, h in zip(operands, homes)
+                       if h == target), None)
+        moved = 0
+        for cbv, h in zip(operands, homes):
+            if h == target or cbv.slots[i][0] == target:
+                continue        # second clause: duplicate handle in env
+            src_d, src_slot = cbv.slots[i]
+            (new_slot,) = self._alloc_on(
+                target, 1, near=[anchor] if anchor else None,
+                protect=operands)
+            data = self.devices[src_d].read([src_slot])
+            self.devices[target].write([new_slot], data)
+            self.allocators[src_d].free([src_slot])
+            cbv.slots[i] = (target, new_slot)
+            anchor = anchor or new_slot
+            self.ledger.inter_device_rows += 1
+            self.ledger.inter_device_bytes += self.row_bytes
+            self.ledger.inter_device_ns += \
+                self.channel.device_to_device_ns(src_d, target,
+                                                 self.row_bytes)
+            self.ledger.inter_device_nj += \
+                self.channel.device_to_device_nj(src_d, target,
+                                                 self.row_bytes)
+            moved += 1
+        return moved
+
+
+@dataclasses.dataclass
+class ClusterReport:
+    """What one sharded planner execution did, and what it cost."""
+
+    per_device_ns: Dict[int, float] = dataclasses.field(default_factory=dict)
+    transferred_rows: int = 0       # cross-device colocation moves
+    transfer_ns: float = 0.0
+    transfer_bytes: int = 0
+    stats: OpStats = dataclasses.field(default_factory=OpStats)
+
+
+class ClusterPlanner:
+    """Lower one expression tree across every shard of the cluster.
+
+    Per chunk, operands are first unified onto one device (cheapest
+    direction from the channel model - explicit, measured transfer ops);
+    each device then runs ONE sub-plan over its chunk group through the
+    existing QueryPlanner (subarray batching, scratch staging). Reported
+    time is max-over-devices compute plus the serialized channel time;
+    energy and AAP counts are summed (the Fig. 21 accounting, lifted one
+    level up the hierarchy)."""
+
+    def __init__(self, cluster: PimCluster):
+        self.cluster = cluster
+        self.last_report: Optional[ClusterReport] = None
+
+    def execute(self, expression: E.Expr,
+                env: Dict[str, ClusterBitVector],
+                out_name: Optional[str] = None) -> ClusterBitVector:
+        cl = self.cluster
+        if not env:
+            raise ValueError("planner needs at least one operand")
+        names = sorted(env)
+        operands = [env[nm] for nm in names]
+        first = operands[0]
+        for cbv in operands:
+            cl._check_live(cbv)
+            if (cbv.n_bits, cbv.shape, cbv.n_slots) != (
+                    first.n_bits, first.shape, first.n_slots):
+                raise ValueError(
+                    "bbop operands must be row-aligned and equal-sized "
+                    "(Section 5.3)")
+            cl._touch(cbv)
+        report = ClusterReport()
+
+        dst: List[Optional[DeviceSlot]] = [None] * first.n_slots
+        dev_stats: Dict[int, OpStats] = {}
+        cl._in_flight = tuple(operands)     # no eviction of operands
+        try:
+            led = cl.ledger
+            rows0, ns0, bytes0, nj0 = (led.inter_device_rows,
+                                       led.inter_device_ns,
+                                       led.inter_device_bytes,
+                                       led.inter_device_nj)
+            if len(operands) > 1:
+                cl.colocate(operands)
+            report.transferred_rows = led.inter_device_rows - rows0
+            report.transfer_ns = led.inter_device_ns - ns0
+            report.transfer_bytes = led.inter_device_bytes - bytes0
+            transfer_nj = led.inter_device_nj - nj0
+
+            by_dev: Dict[int, List[int]] = {}
+            for i in range(first.n_slots):
+                by_dev.setdefault(operands[0].slots[i][0], []).append(i)
+
+            try:
+                for d in sorted(by_dev):
+                    idxs = by_dev[d]
+                    sub_env = {nm: self._subview(env[nm], d, idxs)
+                               for nm in names}
+                    res = cl.planners[d].execute(expression, sub_env)
+                    cl.stores[d].disown(res)
+                    # Per-device colocation may have moved operand rows
+                    # within the device: write the sub-view slots back.
+                    for nm in names:
+                        sv = sub_env[nm]
+                        for k, i in enumerate(idxs):
+                            env[nm].slots[i] = (d, sv.slots[k])
+                    for k, i in enumerate(idxs):
+                        dst[i] = (d, res.slots[k])
+                    res.slots = []  # ownership moves to the cluster handle
+                    dev_stats[d] = cl.planners[d].last_report.stats
+            except AmbitError:
+                for ds in dst:
+                    if ds is not None:
+                        cl.allocators[ds[0]].free([ds[1]])
+                raise
+        finally:
+            cl._in_flight = ()
+
+        report.per_device_ns = {d: st.ns for d, st in dev_stats.items()
+                                if st.ns > 0.0}
+        report.stats = OpStats(
+            ns=max((st.ns for st in dev_stats.values()), default=0.0)
+            + report.transfer_ns,
+            energy_nj=sum(st.energy_nj for st in dev_stats.values())
+            + transfer_nj,
+            aap_count=sum(st.aap_count for st in dev_stats.values()),
+            bytes_touched=0,        # resident: no host traffic
+            channel_ns=report.transfer_ns,
+            channel_bytes=report.transfer_bytes)
+        self.last_report = report
+
+        out = ClusterBitVector(
+            cluster=cl, n_bits=first.n_bits, shape=first.shape,
+            words32=first.words32, chunks=first.chunks, slots=dst,
+            dirty=True, name=out_name)
+        cl._register(out)
+        return out
+
+    def _subview(self, cbv: ClusterBitVector, d: int,
+                 idxs: List[int]) -> ResidentBitVector:
+        """A per-device ResidentBitVector view of the chunks living on
+        device ``d``: each chunk becomes one full-row logical row, so the
+        device planner can batch/stage/colocate them natively. Slot
+        updates are written back by the caller after the sub-plan."""
+        cl = self.cluster
+        return ResidentBitVector(
+            store=cl.stores[d], n_bits=cl.words * 64, shape=(len(idxs),),
+            words32=cl.words * 2, chunks=1,
+            slots=[cbv.slots[i][1] for i in idxs], dirty=True,
+            name=cbv.name)

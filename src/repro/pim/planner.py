@@ -97,11 +97,15 @@ class QueryPlanner:
         before = self._bank_totals()
 
         operands = [env[nm] for nm in names]
+        for rbv in operands:
+            self.store._touch(rbv)      # in-use: refresh LRU recency
         if self.colocate and len(operands) > 1:
             report.migrated_rows = self.store.colocate(operands)
 
-        # Destination rows co-located with their chunk's operands. Roll
-        # back on device-full so failed evals never leak live rows.
+        # Destination rows co-located with their chunk's operands. The
+        # fallback path may LRU-spill bystanders on a full device, but the
+        # call's own operands are protected for the duration. Roll back on
+        # device-full so failed evals never leak live rows.
         dst_slots: List[tuple] = []
         try:
             for i in range(first.n_slots):
@@ -109,8 +113,9 @@ class QueryPlanner:
                 try:
                     (slot,) = self.store.allocator.alloc_in(hb, hs, 1)
                 except AmbitError:
-                    (slot,) = self.store.allocator.alloc(
-                        1, near=[r.slots[i] for r in operands])
+                    (slot,) = self.store.alloc_slots(
+                        1, near=[r.slots[i] for r in operands],
+                        protect=operands)
                 dst_slots.append(slot)
         except AmbitError:
             self.store.allocator.free(dst_slots)
@@ -153,10 +158,10 @@ class QueryPlanner:
             bytes_touched=0)        # resident: no host traffic
         self.last_report = report
 
-        return ResidentBitVector(
+        return self.store.adopt(ResidentBitVector(
             store=self.store, n_bits=first.n_bits, shape=first.shape,
             words32=first.words32, chunks=first.chunks, slots=dst_slots,
-            dirty=True, name=out_name)
+            dirty=True, name=out_name))
 
     def _fetch(self, src: tuple, gb: int, gs: int,
                report: PlanReport) -> np.ndarray:

@@ -1,8 +1,9 @@
 """AmbitRuntime: the session API applications call instead of raw
 ``engine.eval``.
 
-A runtime owns one simulated device, a RowAllocator, a PimStore and a
-QueryPlanner, and exposes the put / eval / get / free lifecycle:
+A runtime owns one simulated device (or, with ``devices > 1``, a
+``PimCluster`` of them), a RowAllocator per device, a PimStore-compatible
+store and a planner, and exposes the put / eval / get / free lifecycle:
 
     rt = AmbitRuntime(banks=4, subarrays=4, words=64)
     a, b = rt.put(bv_a), rt.put(bv_b)
@@ -11,11 +12,20 @@ QueryPlanner, and exposes the put / eval / get / free lifecycle:
     result = rt.get(acc)           # the only host transfer
     rt.free(acc)
 
-Per-call DRAM cost lands in ``last_stats`` (time = max over banks; energy
-and AAPs summed); ``session_stats`` accumulates across the session, and
+Multi-device sessions shard every bitvector across the cluster
+(``placement=`` picks round_robin / packed / affinity) and lower each
+expression as per-device sub-plans with explicit, measured inter-device
+transfers when operands span shards:
+
+    rt = AmbitRuntime(devices=4, placement="round_robin")
+
+Per-call DRAM cost lands in ``last_stats`` (time = max over banks - and,
+sharded, max over devices plus serialized channel time; energy and AAPs
+summed); ``session_stats`` accumulates across the session, and
 ``bytes_touched`` counts only genuine host<->device transfers, so a
 resident chain's ledger shows exactly the data-movement win the paper is
-about.
+about. Spilled operands (LRU eviction on a full device) fault back in
+transparently at eval time; the re-upload is charged to the call.
 """
 
 from __future__ import annotations
@@ -29,6 +39,8 @@ from ..core.geometry import DEFAULT_GEOMETRY, DRAMGeometry
 from ..core.simulator import AmbitDevice
 from ..core.timing import DEFAULT_TIMING, TimingParams
 from .allocator import STRIPED
+from .cluster import (ChannelModel, ClusterBitVector, PimCluster,
+                      ROUND_ROBIN)
 from .planner import QueryPlanner
 from .store import PimStore, ResidentBitVector
 
@@ -41,54 +53,85 @@ class AmbitRuntime:
                  words: Optional[int] = None,
                  policy: str = STRIPED, optimize: bool = True,
                  colocate: bool = True, scratch_rows: int = 4,
+                 devices: int = 1, placement: str = ROUND_ROBIN,
+                 channel: Optional[ChannelModel] = None,
                  seed: int = 0):
-        self.device = AmbitDevice(geometry, timing, banks=banks,
-                                  subarrays=subarrays, words=words,
-                                  seed=seed)
-        self.store = PimStore(self.device, policy=policy,
-                              scratch_rows=scratch_rows)
-        self.allocator = self.store.allocator
-        self.planner = QueryPlanner(self.store, optimize=optimize,
-                                    colocate=colocate)
+        if devices > 1:
+            self.cluster = PimCluster(
+                devices, geometry, timing, banks=banks,
+                subarrays=subarrays, words=words, placement=placement,
+                channel=channel, policy=policy, scratch_rows=scratch_rows,
+                optimize=optimize, colocate=colocate, seed=seed)
+            self.store = self.cluster
+            self.device = self.cluster.devices[0]
+            self.allocator = None       # per-device: cluster.allocators
+            self.planner = self.cluster.planner
+            self._handle_type = ClusterBitVector
+        else:
+            self.cluster = None
+            self.device = AmbitDevice(geometry, timing, banks=banks,
+                                      subarrays=subarrays, words=words,
+                                      seed=seed)
+            self.store = PimStore(self.device, policy=policy,
+                                  scratch_rows=scratch_rows)
+            self.allocator = self.store.allocator
+            self.planner = QueryPlanner(self.store, optimize=optimize,
+                                        colocate=colocate)
+            self._handle_type = ResidentBitVector
         self.session_stats = OpStats()
         self.last_stats: Optional[OpStats] = None
 
     # -- lifecycle -----------------------------------------------------------
 
     def put(self, bv: BitVector, name: Optional[str] = None,
-            near=None) -> ResidentBitVector:
-        rbv = self.store.put(bv, near=near, name=name)
-        self._account(OpStats(bytes_touched=rbv.device_bytes))
+            near=None, pin: bool = False):
+        before = self.store.bytes_from_device
+        rbv = self.store.put(bv, near=near, name=name, pin=pin)
+        # A full device LRU-spills victims; dirty ones were read back
+        # through the ledger - charge that traffic to this call too.
+        spill_bytes = self.store.bytes_from_device - before
+        self._account(OpStats(
+            bytes_touched=rbv.device_bytes + spill_bytes))
         return rbv
 
-    def get(self, rbv: ResidentBitVector) -> BitVector:
-        was_dirty = rbv.dirty
+    def get(self, rbv) -> BitVector:
+        was_dirty = rbv.dirty and not rbv.spilled
         out = self.store.get(rbv)
         self._account(OpStats(
             bytes_touched=rbv.device_bytes if was_dirty else 0))
         return out
 
-    def free(self, rbv: ResidentBitVector) -> None:
+    def free(self, rbv) -> None:
         self.store.free(rbv)
 
     # -- evaluation ----------------------------------------------------------
 
-    def eval(self, expression: E.Expr,
-             env: Dict[str, ResidentBitVector],
-             out_name: Optional[str] = None) -> ResidentBitVector:
+    def eval(self, expression: E.Expr, env: Dict[str, object],
+             out_name: Optional[str] = None):
         """Evaluate a whole expression tree over resident operands. The
-        result is a new resident bitvector; nothing crosses the channel."""
+        result is a new resident bitvector; nothing crosses the channel
+        except fault-ins of previously spilled operands."""
         for nm, v in env.items():
-            if not isinstance(v, ResidentBitVector):
+            if not isinstance(v, self._handle_type):
                 raise TypeError(
                     f"operand {nm!r} is not resident - call put() first "
                     "(the host path is BulkBitwiseEngine.eval)")
+        operands = list(env.values())
+        up_before = self.store.bytes_to_device
+        rd_before = self.store.bytes_from_device
+        for v in operands:
+            self.store.ensure_resident(v, protect=operands)
         out = self.planner.execute(expression, env, out_name=out_name)
-        self._account(self.planner.last_report.stats)
+        st = OpStats()
+        st += self.planner.last_report.stats
+        # Fault-ins (and any spill read-backs they forced) are host
+        # traffic this call caused: charge them here.
+        st.bytes_touched += (self.store.bytes_to_device - up_before) + \
+            (self.store.bytes_from_device - rd_before)
+        self._account(st)
         return out
 
-    def _binop(self, op: str, a: ResidentBitVector,
-               b: ResidentBitVector) -> ResidentBitVector:
+    def _binop(self, op: str, a, b):
         return self.eval(binop_expr(op), {"a": a, "b": b})
 
     def and_(self, a, b):
@@ -109,14 +152,14 @@ class AmbitRuntime:
     def xnor(self, a, b):
         return self._binop("xnor", a, b)
 
-    def not_(self, a: ResidentBitVector) -> ResidentBitVector:
+    def not_(self, a):
         return self.eval(~E.Expr.var("a"), {"a": a})
 
-    def maj(self, a, b, c) -> ResidentBitVector:
+    def maj(self, a, b, c):
         return self.eval(E.maj(E.Expr.var("a"), E.Expr.var("b"),
                                E.Expr.var("c")), {"a": a, "b": b, "c": c})
 
-    def popcount(self, rbv: ResidentBitVector) -> int:
+    def popcount(self, rbv) -> int:
         """Final reduction runs on the host (Section 9.1 future-op): this
         reads the result back - the one transfer a resident query pays."""
         return int(self.get(rbv).popcount())

@@ -15,6 +15,16 @@ read back (planner results are born dirty); ``get`` on a clean handle
 returns the cached host copy without touching the device, so the
 bytes-touched ledger only grows for real host<->DRAM transfers.
 
+LRU spill: when the device fills, ``put`` (and the planner's
+destination-row allocation) evicts the least-recently-used unpinned
+resident bitvectors instead of failing. A *clean* victim's host copy is
+already current, so spilling it is free - zero ledger bytes; a *dirty*
+victim is read back through the ledger first. Spilled handles stay valid:
+``get`` serves the host copy for free and ``ensure_resident`` faults the
+rows back in (charged as a fresh upload). ``pin=True`` at put time (or
+``rbv.pinned = True``) exempts a handle from eviction, and operands of an
+in-flight planner call are protected for the duration of the call.
+
 ``colocate`` is the PSM/RowClone migration planner: operands of one op
 whose corresponding chunks landed in different subarrays are migrated
 (RowClone-PSM within a bank, channel copy across banks - both charged to
@@ -24,7 +34,8 @@ the device ledger) so the op can run fully in-subarray.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import OrderedDict
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -35,13 +46,57 @@ from ..core.simulator import AmbitDevice, AmbitError
 from .allocator import RowAllocator, Slot, STRIPED
 
 
-@dataclasses.dataclass
+# -- host <-> device-row layout (shared with pim.cluster) ---------------------
+
+
+def _used32(n_bits: int, words32: int) -> int:
+    """Meaningful packed uint32 words: BitVector pads the trailing dim
+    to a VREG-lane multiple (bitvector.py), but only ceil(n_bits/32)
+    words carry data - the lane padding is zero by construction and is
+    not worth device rows."""
+    return min(words32, -(-n_bits // 32))
+
+
+def chunk_rows(bv: BitVector, words: int) -> np.ndarray:
+    """Host BitVector -> (n_chunks, words) uint64 device-row chunks."""
+    data32 = np.asarray(bv.data, np.uint32)
+    flat = data32.reshape(-1, data32.shape[-1])
+    used = _used32(bv.n_bits, data32.shape[-1])
+    u64 = _to_u64(np.ascontiguousarray(flat[:, :used]))
+    pad = (-u64.shape[1]) % words
+    if pad:
+        u64 = np.concatenate(
+            [u64, np.zeros((u64.shape[0], pad), np.uint64)], axis=1)
+    return u64.reshape(-1, words)
+
+
+def unchunk_rows(rows: np.ndarray, n_bits: int, shape: Tuple[int, ...],
+                 words32: int, words: int) -> BitVector:
+    """(n_chunks, words) uint64 device rows -> the host BitVector layout."""
+    n_rows = int(np.prod(shape)) if shape else 1
+    u64 = rows.reshape(n_rows, -1)
+    used = _used32(n_bits, words32)
+    u32 = np.ascontiguousarray(u64).view(np.uint32)[:, :used]
+    if used < words32:              # restore the host lane padding
+        u32 = np.concatenate(
+            [u32, np.zeros((n_rows, words32 - used), np.uint32)], axis=1)
+    out = jnp.asarray(u32.reshape(shape + (words32,)))
+    return BitVector(_mask_tail(out, n_bits), n_bits)
+
+
+@dataclasses.dataclass(eq=False)
 class ResidentBitVector:
-    """Handle to a bitvector resident in device rows.
+    """Handle to a bitvector resident in device rows. Handles compare
+    (and hash) by identity.
 
     ``slots`` is logical-row-major, chunk-minor: logical row r of the host
     (rows, n_bits) layout occupies slots[r*chunks : (r+1)*chunks], each
-    holding one device-row-sized chunk of the packed words."""
+    holding one device-row-sized chunk of the packed words.
+
+    ``spilled`` handles hold no device rows (they were LRU-evicted) but
+    remain fully usable: the host copy is current, ``get`` is free, and
+    ``PimStore.ensure_resident`` re-uploads on demand. ``pinned`` handles
+    are never chosen as eviction victims."""
 
     store: "PimStore"
     n_bits: int
@@ -50,6 +105,8 @@ class ResidentBitVector:
     chunks: int                  # device rows per logical row
     slots: List[Slot]
     dirty: bool = False
+    pinned: bool = False
+    spilled: bool = False
     name: Optional[str] = None
     _host: Optional[BitVector] = None
 
@@ -63,7 +120,7 @@ class ResidentBitVector:
 
     @property
     def freed(self) -> bool:
-        return not self.slots
+        return not self.slots and not self.spilled
 
     def get(self) -> BitVector:
         return self.store.get(self)
@@ -73,11 +130,102 @@ class ResidentBitVector:
 
     def __repr__(self):
         nm = f" {self.name!r}" if self.name else ""
+        flags = (" pinned" if self.pinned else "") + \
+            (" spilled" if self.spilled else "")
         return (f"<ResidentBitVector{nm} n_bits={self.n_bits} "
-                f"slots={self.n_slots} dirty={self.dirty}>")
+                f"slots={self.n_slots} dirty={self.dirty}{flags}>")
 
 
-class PimStore:
+class LruSpillBase:
+    """LRU bookkeeping + spill lifecycle shared by PimStore and PimCluster.
+
+    One recency order, one eviction contract: ``spill`` frees a clean
+    victim's rows for zero channel bytes (the host copy is current) and
+    reads a dirty victim back through the ledger first; ``get`` serves
+    spilled handles from the host copy for free. Subclasses provide the
+    actual IO and row bookkeeping via ``_read_back`` / ``_release_rows``
+    / ``_owner_of``."""
+
+    _handle_desc = "resident bitvector"
+
+    def _lru_init(self) -> None:
+        self.evicted_clean = 0
+        self.evicted_dirty = 0
+        self._lru: "OrderedDict[int, object]" = OrderedDict()
+
+    def _register(self, rbv) -> None:
+        self._lru[id(rbv)] = rbv
+        self._lru.move_to_end(id(rbv))
+
+    def _touch(self, rbv) -> None:
+        if id(rbv) in self._lru:
+            self._lru.move_to_end(id(rbv))
+
+    def _unregister(self, rbv) -> None:
+        self._lru.pop(id(rbv), None)
+
+    def spill(self, rbv) -> None:
+        """Evict a handle's device rows back to host. Clean handles cost
+        zero channel bytes; dirty ones are read back through the ledger
+        first."""
+        self._check_live(rbv)
+        if rbv.pinned:
+            raise AmbitError(f"cannot spill pinned {rbv!r}")
+        if rbv.dirty or rbv._host is None:
+            self._read_back(rbv)
+            self.evicted_dirty += 1
+        else:
+            self.evicted_clean += 1
+        self._release_rows(rbv)
+        rbv.spilled = True
+        self._unregister(rbv)
+
+    def get(self, rbv) -> BitVector:
+        self._check_handle(rbv)
+        if rbv.spilled:
+            return rbv._host            # evicted clean: host copy current
+        self._touch(rbv)
+        if not rbv.dirty and rbv._host is not None:
+            return rbv._host            # host copy is current: no traffic
+        return self._read_back(rbv)
+
+    def free(self, rbv) -> None:
+        self._check_handle(rbv)
+        self._release_rows(rbv)
+        self._unregister(rbv)
+        rbv.spilled = False
+        rbv._host = None
+
+    def _check_handle(self, rbv) -> None:
+        """Valid for get/free/ensure_resident: live OR spilled."""
+        if rbv.freed:
+            raise AmbitError(
+                f"use of freed {self._handle_desc} {rbv!r}")
+        if self._owner_of(rbv) is not self:
+            raise AmbitError(
+                f"{self._handle_desc} belongs to another store")
+
+    def _check_live(self, rbv) -> None:
+        """Valid for device-side ops: must actually hold rows."""
+        self._check_handle(rbv)
+        if rbv.spilled:
+            raise AmbitError(
+                f"device-side use of spilled {rbv!r} "
+                "(ensure_resident re-uploads it)")
+
+    # subclass hooks ---------------------------------------------------------
+
+    def _read_back(self, rbv) -> BitVector:
+        raise NotImplementedError
+
+    def _release_rows(self, rbv) -> None:
+        raise NotImplementedError
+
+    def _owner_of(self, rbv):
+        raise NotImplementedError
+
+
+class PimStore(LruSpillBase):
     """put/get/free lifecycle for resident bitvectors on one device."""
 
     def __init__(self, device: AmbitDevice,
@@ -108,47 +256,80 @@ class PimStore:
         self.bytes_to_device = 0
         self.bytes_from_device = 0
         self.migrated_rows = 0
+        # Eviction ledger + recency order (LruSpillBase): clean spills cost
+        # nothing; dirty spills show up in host_reads/bytes_from_device.
+        self._lru_init()
+        # When this store is one device of a PimCluster, handles live in
+        # the CLUSTER's LRU; the cluster installs a fallback here so a
+        # full device can still evict during per-device sub-plans.
+        self.spill_fallback = None
 
     # -- layout --------------------------------------------------------------
 
-    @staticmethod
-    def _used32(n_bits: int, words32: int) -> int:
-        """Meaningful packed uint32 words: BitVector pads the trailing dim
-        to a VREG-lane multiple (bitvector.py), but only ceil(n_bits/32)
-        words carry data - the lane padding is zero by construction and is
-        not worth device rows."""
-        return min(words32, -(-n_bits // 32))
-
     def _chunk(self, bv: BitVector) -> np.ndarray:
-        """Host BitVector -> (n_slots, device.words) uint64 row chunks."""
-        data32 = np.asarray(bv.data, np.uint32)
-        flat = data32.reshape(-1, data32.shape[-1])
-        used = self._used32(bv.n_bits, data32.shape[-1])
-        u64 = _to_u64(np.ascontiguousarray(flat[:, :used]))
-        w = self.device.words
-        pad = (-u64.shape[1]) % w
-        if pad:
-            u64 = np.concatenate(
-                [u64, np.zeros((u64.shape[0], pad), np.uint64)], axis=1)
-        return u64.reshape(-1, w)
+        return chunk_rows(bv, self.device.words)
 
     def _unchunk(self, rows: np.ndarray, rbv: ResidentBitVector) -> BitVector:
-        n_rows = int(np.prod(rbv.shape)) if rbv.shape else 1
-        u64 = rows.reshape(n_rows, rbv.chunks * self.device.words)
-        used = self._used32(rbv.n_bits, rbv.words32)
-        u32 = np.ascontiguousarray(u64).view(np.uint32)[:, :used]
-        if used < rbv.words32:          # restore the host lane padding
-            u32 = np.concatenate(
-                [u32, np.zeros((n_rows, rbv.words32 - used), np.uint32)],
-                axis=1)
-        out = jnp.asarray(u32.reshape(rbv.shape + (rbv.words32,)))
-        return BitVector(_mask_tail(out, rbv.n_bits), rbv.n_bits)
+        return unchunk_rows(rows, rbv.n_bits, rbv.shape, rbv.words32,
+                            self.device.words)
+
+    # -- LRU / eviction (machinery in LruSpillBase) --------------------------
+
+    def _owner_of(self, rbv: ResidentBitVector):
+        return rbv.store
+
+    def _release_rows(self, rbv: ResidentBitVector) -> None:
+        if rbv.slots:
+            self.allocator.free(rbv.slots)
+        rbv.slots = []
+
+    def adopt(self, rbv: ResidentBitVector) -> ResidentBitVector:
+        """Track an externally-built handle (planner results) in the LRU so
+        it participates in spill like any put() handle."""
+        self._register(rbv)
+        return rbv
+
+    def disown(self, rbv: ResidentBitVector) -> ResidentBitVector:
+        """Stop tracking a handle without freeing its rows (the cluster
+        harvests per-device sub-results into cluster-level handles)."""
+        self._unregister(rbv)
+        return rbv
+
+    def _evict_one(self, protect: Iterable[ResidentBitVector]) -> bool:
+        """Spill the least-recently-used evictable handle. Returns False
+        when every registered handle is pinned or protected (after giving
+        a cluster-installed fallback the chance to evict at its scope)."""
+        protected = {id(p) for p in protect}
+        for rbv in list(self._lru.values()):
+            if rbv.pinned or id(rbv) in protected or not rbv.slots:
+                continue
+            self.spill(rbv)
+            return True
+        if self.spill_fallback is not None:
+            return self.spill_fallback()
+        return False
+
+    def alloc_slots(self, n_rows: int, policy: Optional[str] = None,
+                    near: Optional[Sequence[Slot]] = None,
+                    protect: Iterable[ResidentBitVector] = ()
+                    ) -> List[Slot]:
+        """Allocate rows, LRU-spilling unpinned resident bitvectors (not in
+        ``protect``) when the device is full. Raises AmbitError when the
+        request cannot fit even after evicting everything evictable."""
+        while self.allocator.shortfall(n_rows):
+            if not self._evict_one(protect):
+                raise AmbitError(
+                    f"device full ({self.allocator.live}/"
+                    f"{self.allocator.capacity} rows live) and every "
+                    f"resident bitvector is pinned or in use")
+        return self.allocator.alloc(n_rows, policy=policy, near=near)
 
     # -- lifecycle -----------------------------------------------------------
 
     def put(self, bv: BitVector, policy: Optional[str] = None,
             near: Optional[Sequence[Slot]] = None,
-            name: Optional[str] = None) -> ResidentBitVector:
+            name: Optional[str] = None,
+            pin: bool = False) -> ResidentBitVector:
         chunks = self._chunk(bv)
         if len(chunks) == 0:
             raise AmbitError("cannot make a zero-row bitvector resident")
@@ -160,29 +341,26 @@ class PimStore:
             slots = []
             try:
                 for k in range(len(chunks)):
-                    slots.extend(self.allocator.alloc(
+                    slots.extend(self.alloc_slots(
                         1, policy=policy, near=[near[k]]))
             except AmbitError:
                 self.allocator.free(slots)
                 raise
         else:
-            slots = self.allocator.alloc(len(chunks), policy=policy,
-                                         near=near)
+            slots = self.alloc_slots(len(chunks), policy=policy, near=near)
         self.device.write(slots, chunks)
         data32 = np.asarray(bv.data, np.uint32)
         rbv = ResidentBitVector(
             store=self, n_bits=bv.n_bits, shape=data32.shape[:-1],
             words32=data32.shape[-1],
             chunks=len(chunks) // max(1, int(np.prod(data32.shape[:-1]))),
-            slots=slots, dirty=False, name=name, _host=bv)
+            slots=slots, dirty=False, pinned=pin, name=name, _host=bv)
         self.host_writes += 1
         self.bytes_to_device += rbv.device_bytes
+        self._register(rbv)
         return rbv
 
-    def get(self, rbv: ResidentBitVector) -> BitVector:
-        self._check_live(rbv)
-        if not rbv.dirty and rbv._host is not None:
-            return rbv._host            # host copy is current: no traffic
+    def _read_back(self, rbv: ResidentBitVector) -> BitVector:
         rows = self.device.read(rbv.slots)
         out = self._unchunk(rows.reshape(len(rbv.slots), self.device.words),
                             rbv)
@@ -192,17 +370,25 @@ class PimStore:
         self.bytes_from_device += rbv.device_bytes
         return out
 
-    def free(self, rbv: ResidentBitVector) -> None:
-        self._check_live(rbv)
-        self.allocator.free(rbv.slots)
-        rbv.slots = []
-        rbv._host = None
-
-    def _check_live(self, rbv: ResidentBitVector) -> None:
-        if rbv.freed:
-            raise AmbitError(f"use of freed resident bitvector {rbv!r}")
-        if rbv.store is not self:
-            raise AmbitError("resident bitvector belongs to another store")
+    def ensure_resident(self, rbv: ResidentBitVector,
+                        protect: Iterable[ResidentBitVector] = ()
+                        ) -> ResidentBitVector:
+        """Fault a spilled handle back into device rows (charged as a fresh
+        host->device upload). Live handles just refresh recency."""
+        self._check_handle(rbv)
+        if not rbv.spilled:
+            self._touch(rbv)
+            return rbv
+        chunks = self._chunk(rbv._host)
+        slots = self.alloc_slots(len(chunks), protect=(rbv, *protect))
+        self.device.write(slots, chunks)
+        rbv.slots = slots
+        rbv.spilled = False
+        rbv.dirty = False
+        self.host_writes += 1
+        self.bytes_to_device += rbv.device_bytes
+        self._register(rbv)
+        return rbv
 
     # -- migration planner ---------------------------------------------------
 

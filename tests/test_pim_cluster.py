@@ -1,0 +1,436 @@
+"""Sharded multi-device PimCluster: placement policies, the channel cost
+model, cross-device colocation, cluster-level LRU spill, and - most
+importantly - differential equivalence: sharded evaluation must be
+bit-identical to single-device evaluation (and to the jnp reference) for
+random expression trees over every placement policy.
+
+Property tests run under hypothesis when installed; without it they fall
+back to deterministic seeded sweeps over the same generators (the
+test_pim_runtime.py pattern), so collection never fails.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (AmbitError, BitVector, BulkBitwiseEngine,
+                        DRAMGeometry, Expr, maj)
+from repro.pim import (AFFINITY, AmbitRuntime, ChannelModel,
+                       CLUSTER_POLICIES, PACKED, PimCluster, ROUND_ROBIN)
+
+GEOM = DRAMGeometry(rows_per_subarray=32)  # 14 data rows: compact devices
+RNG = np.random.default_rng(29)
+
+X, Y, Z = Expr.var("x"), Expr.var("y"), Expr.var("z")
+CHAIN6 = ((X & Y) | ~Z) ^ ((X | Y) & Z)    # and,or,not,or,and,xor = 6 ops
+
+
+def _cluster(devices=2, **kw):
+    kw.setdefault("banks", 2)
+    kw.setdefault("subarrays", 2)
+    kw.setdefault("words", 2)
+    kw.setdefault("scratch_rows", 2)
+    return PimCluster(devices, GEOM, **kw)
+
+
+def _bv(n_chunks, rng=RNG):
+    return BitVector.from_bits(
+        rng.integers(0, 2, n_chunks * 128).astype(bool))
+
+
+# -- channel cost model -------------------------------------------------------
+
+
+def test_channel_model_per_hop_costs():
+    cm = ChannelModel()
+    assert cm.device_to_device_ns(1, 1, 8192) == 0.0
+    one = cm.device_to_device_ns(0, 1, 8192)
+    two = cm.device_to_device_ns(0, 2, 8192)
+    assert one > cm.link_fixed_ns
+    assert two > one                      # per-hop: distance costs
+    assert two - cm.link_fixed_ns == pytest.approx(
+        2 * (one - cm.link_fixed_ns))
+    assert cm.host_transfer_ns(8192) > cm.host_fixed_ns
+    assert cm.intra_device_ns(8192) > 0
+
+
+# -- placement policies -------------------------------------------------------
+
+
+def test_round_robin_stripes_chunks_across_devices():
+    cl = _cluster(4)
+    rbv = cl.put(_bv(8))
+    assert [d for d, _ in rbv.slots] == [0, 1, 2, 3, 0, 1, 2, 3]
+
+
+def test_packed_fills_devices_in_order():
+    cl = _cluster(2, banks=1, subarrays=1, placement=PACKED)  # 12 rows/dev
+    a = cl.put(_bv(12))
+    b = cl.put(_bv(4))
+    assert a.devices == [0]
+    assert b.devices == [1]               # device 0 full: spill over
+
+
+def test_affinity_follows_neighbor_chunks():
+    cl = _cluster(4, placement=AFFINITY)
+    a = cl.put(_bv(6))
+    b = cl.put(_bv(6), near=a.slots)
+    assert a.devices == [0] and b.devices == [0]
+    assert [s[:1] for s in a.slots] == [s[:1] for s in b.slots]
+    # and within the device, chunks are subarray-aligned too
+    assert [(d, bs[0], bs[1]) for d, bs in a.slots] == \
+        [(d, bs[0], bs[1]) for d, bs in b.slots]
+
+
+def test_affinity_without_neighbor_picks_least_loaded():
+    cl = _cluster(3, placement=AFFINITY)
+    a = cl.put(_bv(4))
+    b = cl.put(_bv(4))                    # no near: next device
+    assert a.devices == [0] and b.devices == [1]
+
+
+# -- cross-device colocation --------------------------------------------------
+
+
+def test_colocate_picks_cheapest_direction():
+    cl = _cluster(3, placement=AFFINITY)
+    a = cl.put(_bv(4))                    # device 0
+    b = cl.put(_bv(4), near=a.slots)      # device 0
+    c = cl.put(_bv(4))                    # device 1 (least loaded)
+    moved = cl.colocate([a, b, c])
+    # moving c's 4 rows to device 0 (one migration per chunk) is cheaper
+    # than moving a AND b to device 1 (two migrations per chunk)
+    assert moved == 4
+    assert c.devices == [0]
+    assert a.devices == [0] and b.devices == [0]
+    assert cl.ledger.inter_device_rows == 4
+    assert cl.ledger.inter_device_bytes == 4 * cl.row_bytes
+    assert cl.ledger.inter_device_ns > 0
+
+
+def test_spanning_eval_measures_transfers_and_stays_correct():
+    rng = np.random.default_rng(7)
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                      devices=4, scratch_rows=2, seed=3)
+    bits = rng.integers(0, 2, (2, 8 * 128)).astype(bool)
+    a = rt.store.put(BitVector.from_bits(bits[0]), placement=PACKED)
+    b = rt.store.put(BitVector.from_bits(bits[1]), placement=ROUND_ROBIN)
+    assert a.devices == [0] and len(b.devices) == 4
+    out = rt.and_(a, b)
+    led = rt.store.ledger
+    # measured, not analytic: bytes == rows actually moved * row size
+    assert led.inter_device_rows > 0
+    assert led.inter_device_bytes == led.inter_device_rows * cl_row_bytes(rt)
+    assert rt.last_stats.channel_bytes == led.inter_device_bytes
+    assert rt.last_stats.channel_ns == pytest.approx(led.inter_device_ns)
+    assert rt.last_stats.ns >= rt.last_stats.channel_ns
+    assert np.array_equal(np.asarray(rt.get(out).bits()),
+                          bits[0] & bits[1])
+
+
+def cl_row_bytes(rt):
+    return rt.store.row_bytes
+
+
+# -- differential equivalence (the acceptance bar) ----------------------------
+
+
+def test_sharded_6op_chain_matches_single_device():
+    """Acceptance: a 6-op chain over >= 4 devices is bit-identical to
+    single-device eval, for every placement policy."""
+    rng = np.random.default_rng(11)
+    bits = rng.integers(0, 2, (3, 2, 6 * 128)).astype(bool)
+    env_host = {k: BitVector.from_bits(bits[i])
+                for i, k in enumerate("xyz")}
+    want = np.asarray(BulkBitwiseEngine("jnp").eval(CHAIN6,
+                                                    env_host).bits())
+    single = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                          scratch_rows=2, seed=1)
+    env = {k: single.put(v) for k, v in env_host.items()}
+    got_single = np.asarray(single.get(single.eval(CHAIN6, env)).bits())
+    assert np.array_equal(got_single, want)
+    for placement in CLUSTER_POLICIES:
+        rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                          devices=4, placement=placement,
+                          scratch_rows=2, seed=1)
+        env = {k: rt.put(v) for k, v in env_host.items()}
+        out = rt.eval(CHAIN6, env)
+        assert out.dirty
+        got = np.asarray(rt.get(out).bits())
+        assert np.array_equal(got, got_single), placement
+
+
+def rand_expr(rng, depth=0):
+    if depth > 3 or rng.integers(2):
+        return (X, Y, Z)[rng.integers(3)]
+    op = ("and", "or", "xor", "not", "maj")[rng.integers(5)]
+    if op == "not":
+        return ~rand_expr(rng, depth + 1)
+    if op == "maj":
+        return maj(rand_expr(rng, depth + 1), rand_expr(rng, depth + 1),
+                   rand_expr(rng, depth + 1))
+    a, b = rand_expr(rng, depth + 1), rand_expr(rng, depth + 1)
+    return {"and": a & b, "or": a | b, "xor": a ^ b}[op]
+
+
+def check_sharded_matches_single(seed, placement, devices):
+    """Sharded eval == single-device eval == jnp, bit for bit. Operands
+    are put WITHOUT near-affinity so policies are free to scatter chunks
+    (affinity then exercises the cross-device colocation path)."""
+    rng = np.random.default_rng(seed)
+    expr = rand_expr(rng)
+    if expr.op in ("var", "lit"):
+        expr = expr ^ Y                   # ensure at least one op
+    n_bits = int(rng.integers(1, 900))
+    bits = rng.integers(0, 2, (3, n_bits)).astype(bool)
+    env_host = {k: BitVector.from_bits(bits[i])
+                for i, k in enumerate("xyz")}
+    want = np.asarray(BulkBitwiseEngine("jnp").eval(expr, env_host).bits())
+    single = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                          scratch_rows=2, seed=seed % 5)
+    env = {k: single.put(v) for k, v in env_host.items()}
+    got_single = np.asarray(single.get(single.eval(expr, env)).bits())
+    assert np.array_equal(got_single, want), (repr(expr), n_bits)
+
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                      devices=devices, placement=placement,
+                      scratch_rows=2, seed=seed % 5)
+    env = {k: rt.put(v) for k, v in env_host.items()}
+    out = rt.eval(expr, env)
+    got = np.asarray(rt.get(out).bits())
+    assert np.array_equal(got, want), (repr(expr), n_bits, placement)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2**32 - 1),
+           st.sampled_from(list(CLUSTER_POLICIES)),
+           st.sampled_from([2, 4]))
+    def test_sharded_matches_single_random(seed, placement, devices):
+        check_sharded_matches_single(seed, placement, devices)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(7))
+    @pytest.mark.parametrize("placement", CLUSTER_POLICIES)
+    @pytest.mark.parametrize("devices", [2, 4])
+    def test_sharded_matches_single_random(seed, placement, devices):
+        check_sharded_matches_single(seed, placement, devices)
+
+
+# -- cluster-level LRU spill --------------------------------------------------
+
+
+def test_cluster_put_spills_lru_clean_for_free():
+    cl = _cluster(2, banks=1, subarrays=1)   # 12 rows per device
+    bv_a = _bv(12)
+    host_a = np.asarray(bv_a.bits())
+    a = cl.put(bv_a, name="a")               # 6 chunks on each device
+    b = cl.put(_bv(8), name="b")
+    base = cl.ledger.device_to_host_bytes
+    c = cl.put(_bv(12), name="c")            # full: evict a (LRU, clean)
+    assert a.spilled and not b.spilled and not c.spilled
+    assert (cl.evicted_clean, cl.evicted_dirty) == (1, 0)
+    assert cl.ledger.device_to_host_bytes == base   # clean: zero bytes
+    assert np.array_equal(np.asarray(cl.get(a).bits()), host_a)
+    cl.ensure_resident(a)                    # fault back in
+    assert not a.spilled
+    assert np.array_equal(np.asarray(cl.get(a).bits()), host_a)
+
+
+def test_cluster_dirty_spill_charges_readback():
+    rng = np.random.default_rng(13)
+    rt = AmbitRuntime(GEOM, banks=1, subarrays=1, words=2,
+                      devices=2, scratch_rows=2, seed=2)
+    bits = rng.integers(0, 2, (2, 8 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    out = rt.xor(a, b)                       # dirty, cluster now full
+    out_bytes = out.device_bytes
+    rt.get(a), rt.get(b)                     # free touches: out is LRU
+    base = rt.store.ledger.device_to_host_bytes
+    rt.put(_bv(8))                           # evicts out: dirty read-back
+    assert out.spilled
+    assert rt.store.evicted_dirty == 1
+    assert rt.store.ledger.device_to_host_bytes == base + out_bytes
+    assert np.array_equal(np.asarray(rt.get(out).bits()),
+                          bits[0] ^ bits[1])
+
+
+def test_sharded_eval_spills_on_full_device():
+    """Cluster analogue of test_planner_protects_in_use_operands: the
+    per-device sub-plans' destination rows on a full cluster LRU-spill a
+    cold bystander (through the per-device store's cluster fallback) -
+    never the in-flight operands."""
+    rng = np.random.default_rng(19)
+    rt = AmbitRuntime(GEOM, banks=1, subarrays=1, words=2,
+                      devices=2, scratch_rows=2, seed=2)
+    bits = rng.integers(0, 2, (3, 8 * 128)).astype(bool)
+    cold = rt.put(BitVector.from_bits(bits[2]))   # oldest: the LRU victim
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    assert sum(al.free_slots for al in rt.store.allocators) == 0
+    out = rt.and_(a, b)                  # dst rows force cluster eviction
+    assert cold.spilled and not a.spilled and not b.spilled
+    assert rt.store.evicted_clean == 1
+    assert np.array_equal(np.asarray(rt.get(out).bits()),
+                          bits[0] & bits[1])
+    # and the spilled bystander still reads back exactly, then faults in
+    assert np.array_equal(np.asarray(rt.get(cold).bits()), bits[2])
+
+
+def test_cluster_pinned_never_evicted():
+    cl = _cluster(2, banks=1, subarrays=1)
+    a = cl.put(_bv(12), pin=True, name="a")
+    b = cl.put(_bv(8), name="b")
+    cl.put(_bv(12), name="c")                # evicts b, not pinned a
+    assert b.spilled and not a.spilled
+    with pytest.raises(AmbitError, match="pinned or in use"):
+        cl.put(_bv(20), name="d")
+
+
+# -- put/evict/free interleaving property test --------------------------------
+
+
+def check_cluster_lifecycle(ops_seed):
+    """Random put/get/free/spill/eval interleavings: allocator occupancy
+    always equals the chunks of unspilled live handles, no slot is owned
+    twice, and every handle - resident or spilled - reads back exactly
+    the bits that were put (or computed: eval results join the pool, so
+    eval under capacity pressure - spill-during-sub-plan - is covered
+    too)."""
+    and_expr = Expr.var("a") & Expr.var("b")
+    rng = np.random.default_rng(ops_seed)
+    cl = _cluster(2, banks=1, subarrays=2,
+                  placement=list(CLUSTER_POLICIES)[int(rng.integers(3))])
+    live = {}        # handle -> expected bits
+    for _ in range(40):
+        roll = rng.integers(6)
+        handles = list(live)
+        if roll == 0 and handles:
+            victim = handles[int(rng.integers(len(handles)))]
+            cl.free(victim)
+            del live[victim]
+        elif roll == 1 and handles:
+            h = handles[int(rng.integers(len(handles)))]
+            if h.slots and not h.pinned:
+                cl.spill(h)
+        elif roll == 2 and handles:
+            h = handles[int(rng.integers(len(handles)))]
+            cl.ensure_resident(h)
+        elif roll == 3 and len(handles) >= 2:
+            h1 = handles[int(rng.integers(len(handles)))]
+            mates = [h for h in handles
+                     if h is not h1 and h.n_slots == h1.n_slots
+                     and h.n_bits == h1.n_bits]
+            if not mates:
+                continue
+            h2 = mates[int(rng.integers(len(mates)))]
+            try:
+                cl.ensure_resident(h1)
+                cl.ensure_resident(h2, protect=(h1,))
+                out = cl.planner.execute(and_expr, {"a": h1, "b": h2})
+            except AmbitError:
+                continue     # cluster genuinely full of in-use handles
+            live[out] = live[h1] & live[h2]
+        else:
+            n_chunks = int(rng.integers(1, 7))
+            bits = rng.integers(0, 2, n_chunks * 128).astype(bool)
+            try:
+                h = cl.put(BitVector.from_bits(bits))
+            except AmbitError:
+                continue         # everything pinned/in-use: fine
+            live[h] = bits
+        # invariants
+        owned = [ds for h in live for ds in h.slots]
+        assert len(owned) == len(set(owned)), "slot owned twice"
+        resident_chunks = sum(len(h.slots) for h in live)
+        assert sum(a.live for a in cl.allocators) == resident_chunks
+        for h, bits in live.items():
+            assert np.array_equal(np.asarray(cl.get(h).bits()), bits)
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**32 - 1))
+    def test_cluster_lifecycle_random(ops_seed):
+        check_cluster_lifecycle(ops_seed)
+
+else:
+
+    @pytest.mark.parametrize("ops_seed", range(15))
+    def test_cluster_lifecycle_random(ops_seed):
+        check_cluster_lifecycle(ops_seed)
+
+
+# -- sharded accounting -------------------------------------------------------
+
+
+def test_sharded_time_is_max_over_devices():
+    """Aligned round-robin chunks: devices run their sub-plans in
+    parallel, so reported time is the max over devices (plus zero channel
+    time), while energy sums."""
+    rng = np.random.default_rng(3)
+    rt = AmbitRuntime(GEOM, banks=1, subarrays=1, words=2,
+                      devices=2, scratch_rows=2, seed=4)
+    bits = rng.integers(0, 2, (2, 4 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    rt.and_(a, b)
+    rep = rt.planner.last_report
+    assert len(rep.per_device_ns) == 2
+    assert rep.transfer_bytes == 0
+    per_dev = list(rep.per_device_ns.values())
+    assert rep.stats.ns == pytest.approx(max(per_dev))
+    assert sum(per_dev) > rep.stats.ns    # parallelism actually claimed
+
+
+def test_apps_run_sharded_bit_identical():
+    """BitmapIndex over a 3-device cluster returns exactly the host-path
+    answers, with zero inter-device traffic (the near= chain keeps
+    co-queried bitmaps chunk-aligned)."""
+    from repro.apps.bitmap_index import BitmapIndex
+
+    rng = np.random.default_rng(5)
+    n_users = 1500
+    weeks = [f"w{i}" for i in range(3)]
+    host = BitmapIndex(n_users, BulkBitwiseEngine("jnp"))
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                      devices=3, scratch_rows=2, seed=6)
+    shard = BitmapIndex(n_users, runtime=rt)
+    for w in weeks + ["male"]:
+        members = rng.choice(n_users, n_users // 3, replace=False)
+        host.add(w, members)
+        shard.add(w, members)
+    want_u, want_pw, _ = host.weekly_active_query(weeks, "male")
+    got_u, got_pw, st = shard.weekly_active_query(weeks, "male")
+    assert (got_u, got_pw) == (want_u, want_pw)
+    assert rt.store.ledger.inter_device_bytes == 0
+    assert st.ns > 0
+
+
+def test_cluster_ledger_deterministic(record_ledger):
+    """Two fresh identical sessions must produce byte-identical ledgers
+    (recorded for the CI double-run diff as well)."""
+    def session():
+        rng = np.random.default_rng(21)
+        rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2, devices=3,
+                          scratch_rows=2, seed=8)
+        bits = rng.integers(0, 2, (3, 6 * 128)).astype(bool)
+        a = rt.store.put(BitVector.from_bits(bits[0]), placement=PACKED)
+        b = rt.put(BitVector.from_bits(bits[1]))
+        c = rt.put(BitVector.from_bits(bits[2]))
+        out = rt.eval(CHAIN6, {"x": a, "y": b, "z": c})
+        rt.get(out)
+        return f"{rt.session_stats!r} | {rt.store.ledger!r}"
+
+    one, two = session(), session()
+    assert one == two
+    record_ledger("pim_cluster_session", one)

@@ -334,6 +334,126 @@ def test_opstats_merge_accumulates_all_fields():
         (11.0, 22.0, 33, 44)
 
 
+# -- LRU spill / eviction -----------------------------------------------------
+
+
+def _tiny_store(seed=5):
+    """1 bank x 1 subarray x 12 usable rows (14 data rows - 2 scratch)."""
+    dev = AmbitDevice(GEOM, banks=1, subarrays=1, words=2, seed=seed)
+    return PimStore(dev, scratch_rows=2)
+
+
+def _bv(n_chunks):
+    return BitVector.from_bits(
+        RNG.integers(0, 2, n_chunks * 128).astype(bool))
+
+
+def test_full_device_spills_lru_clean_for_free():
+    store = _tiny_store()
+    bv_a = _bv(6)
+    host_a = np.asarray(bv_a.bits())
+    a = store.put(bv_a, name="a")
+    b = store.put(_bv(5), name="b")
+    base_reads, base_bytes = store.host_reads, store.bytes_from_device
+    store.put(_bv(6), name="c")          # needs 6, only 1 free: evict LRU
+    assert a.spilled and not a.freed
+    assert not b.spilled
+    assert (store.evicted_clean, store.evicted_dirty) == (1, 0)
+    # clean spill: zero ledger bytes, and the handle still reads for free
+    assert store.host_reads == base_reads
+    assert store.bytes_from_device == base_bytes
+    assert np.array_equal(np.asarray(store.get(a).bits()), host_a)
+    assert store.host_reads == base_reads
+
+
+def test_get_refreshes_lru_recency():
+    store = _tiny_store()
+    a = store.put(_bv(6), name="a")
+    b = store.put(_bv(5), name="b")
+    store.get(a)                         # a is now most-recently-used
+    store.put(_bv(5), name="c")
+    assert b.spilled and not a.spilled
+
+
+def test_dirty_eviction_charges_readback():
+    rt = AmbitRuntime(GEOM, banks=1, subarrays=1, words=2, scratch_rows=2)
+    bits = RNG.integers(0, 2, (2, 4 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    out = rt.xor(a, b)                   # dirty, device now full (12/12)
+    out_bytes = out.device_bytes
+    rt.get(a), rt.get(b)                 # free touches: out becomes LRU
+    base_bytes = rt.store.bytes_from_device
+    d = rt.put(_bv(4))                   # must evict `out` - dirty
+    assert out.spilled
+    assert rt.store.evicted_dirty == 1
+    assert rt.store.bytes_from_device == base_bytes + out_bytes
+    # the spill read-back was charged to the put that forced it
+    assert rt.last_stats.bytes_touched == d.device_bytes + out_bytes
+    # and the evicted result is still correct, served from the host copy
+    assert np.array_equal(np.asarray(rt.get(out).bits()),
+                          bits[0] ^ bits[1])
+
+
+def test_pinned_is_never_evicted():
+    store = _tiny_store()
+    a = store.put(_bv(6), pin=True, name="a")
+    b = store.put(_bv(5), name="b")
+    store.put(_bv(6), name="c")          # evicts b, NOT the pinned a
+    assert b.spilled and not a.spilled
+    with pytest.raises(AmbitError, match="pinned or in use"):
+        store.put(_bv(12), name="d")     # a alone cannot be evicted
+    with pytest.raises(AmbitError, match="pinned"):
+        store.spill(a)
+
+
+def test_planner_protects_in_use_operands():
+    rt = AmbitRuntime(GEOM, banks=1, subarrays=1, words=2, scratch_rows=2)
+    bits = RNG.integers(0, 2, (3, 4 * 128)).astype(bool)
+    cold = rt.put(BitVector.from_bits(bits[2]))   # oldest: the LRU victim
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    out = rt.and_(a, b)                  # dst rows force an eviction
+    assert cold.spilled and not a.spilled and not b.spilled
+    assert np.array_equal(np.asarray(rt.get(out).bits()),
+                          bits[0] & bits[1])
+
+
+def test_spilled_operand_faults_back_in_on_eval():
+    rt = AmbitRuntime(GEOM, banks=1, subarrays=1, words=2, scratch_rows=2)
+    bits = RNG.integers(0, 2, (3, 4 * 128)).astype(bool)
+    cold = rt.put(BitVector.from_bits(bits[2]))
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    out = rt.and_(a, b)                  # spills `cold`
+    assert cold.spilled
+    rt.free(out)
+    rt.free(b)
+    res = rt.xor(cold, a)                # fault-in charged to this call
+    assert not cold.spilled
+    assert rt.last_stats.bytes_touched >= cold.device_bytes
+    assert np.array_equal(np.asarray(rt.get(res).bits()),
+                          bits[2] ^ bits[0])
+
+
+def test_session_ledger_deterministic(record_ledger):
+    """Canonical eviction-heavy session; the recorded ledger is diffed
+    across two CI runs to catch nondeterministic placement."""
+    rt = AmbitRuntime(GEOM, banks=2, subarrays=2, words=2,
+                      scratch_rows=2, seed=9)
+    rng = np.random.default_rng(17)
+    bits = rng.integers(0, 2, (6, 6 * 128)).astype(bool)
+    vecs = [rt.put(BitVector.from_bits(b)) for b in bits]
+    acc = rt.and_(vecs[0], vecs[1])
+    acc = rt.xor(acc, vecs[2])           # device now full (48/48)
+    acc = rt.or_(acc, vecs[3])           # dst rows force LRU evictions
+    rt.get(acc)
+    assert rt.store.evicted_clean + rt.store.evicted_dirty > 0
+    record_ledger("pim_runtime_session",
+                  f"{rt.session_stats!r} evicted="
+                  f"{rt.store.evicted_clean}+{rt.store.evicted_dirty}")
+
+
 def test_device_alloc_rows_shim_free_and_reuse():
     """The back-compat shim supports free/realloc (the seed cursor could
     only run out)."""
