@@ -91,21 +91,37 @@ class BitmapIndex:
 
     def weekly_active_query(self, weeks: List[str], gender: str
                             ) -> Tuple[int, List[int], OpStats]:
-        """The paper's two-part query (Section 8.1)."""
+        """The paper's two-part query (Section 8.1).
+
+        Resident path: the AND-over-all-weeks root and the per-week
+        (week AND gender) roots are submitted as ONE multi-root batch and
+        executed by a single scheduler drain - the runtime overlaps the
+        roots whose operands occupy disjoint banks/devices instead of
+        paying one serialized eval per week. Only the popcounts read data
+        back."""
         total = OpStats()
-        unique_all, st = self.query_and_all(weeks)
-        total += st
-        per_week = []
         if self.runtime is not None:
             rt = self.runtime
             g = self.resident[gender]
-            for wk in weeks:
-                inter = rt.and_(self.resident[wk], g)
+            uniq_t = rt.submit(self._and_tree(weeks),
+                               {nm: self.resident[nm] for nm in weeks})
+            week_ts = [rt.submit(Expr.var("w") & Expr.var("g"),
+                                 {"w": self.resident[wk], "g": g})
+                       for wk in weeks]
+            rt.drain()
+            total += rt.last_stats
+            unique_all = rt.popcount(uniq_t.result)
+            total += rt.last_stats
+            rt.free(uniq_t.result)
+            per_week = []
+            for t in week_ts:
+                per_week.append(rt.popcount(t.result))
                 total += rt.last_stats
-                per_week.append(rt.popcount(inter))
-                total += rt.last_stats
-                rt.free(inter)
+                rt.free(t.result)
             return unique_all, per_week, total
+        unique_all, st = self.query_and_all(weeks)
+        total += st
+        per_week = []
         g = self.bitmaps[gender]
         for wk in weeks:
             inter = self.engine.and_(self.bitmaps[wk], g)

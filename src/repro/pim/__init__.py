@@ -8,6 +8,8 @@ query planning over the Ambit device model.
   PimCluster / ClusterBitVector- N devices behind one store API: sharded
                                  placement, channel cost model, cross-device
                                  colocation, per-device sub-plans
+  AsyncScheduler / Ticket      - submit/drain queue packing bank/device-
+                                 disjoint queries into concurrent epochs
   AmbitRuntime                 - the session API applications use
                                  (devices=N shards across a cluster)
 """
@@ -18,12 +20,14 @@ from .cluster import (AFFINITY, ChannelLedger, ChannelModel, CLUSTER_POLICIES,
                       PACKED, PimCluster, ROUND_ROBIN)
 from .planner import PlanReport, QueryPlanner
 from .runtime import AmbitRuntime
+from .scheduler import (AsyncScheduler, DrainReport, EpochReport, Ticket)
 from .store import PimStore, ResidentBitVector
 
 __all__ = [
-    "AFFINITY", "AmbitRuntime", "COLOCATED", "ChannelLedger", "ChannelModel",
-    "CLUSTER_POLICIES", "ClusterBitVector", "ClusterPlanner", "ClusterReport",
+    "AFFINITY", "AmbitRuntime", "AsyncScheduler", "COLOCATED",
+    "ChannelLedger", "ChannelModel", "CLUSTER_POLICIES", "ClusterBitVector",
+    "ClusterPlanner", "ClusterReport", "DrainReport", "EpochReport",
     "PACKED", "PimCluster", "PimStore", "PlanReport", "POLICIES",
     "QueryPlanner", "ResidentBitVector", "ROUND_ROBIN", "RowAllocator",
-    "STRIPED", "Slot",
+    "STRIPED", "Slot", "Ticket",
 ]

@@ -306,15 +306,20 @@ class PimCluster(LruSpillBase):
 
     def _evict_one(self, d: int,
                    protect: Iterable[ClusterBitVector]) -> bool:
-        """Spill the LRU unpinned handle owning rows on device ``d``."""
+        """Spill the LRU unpinned handle owning rows on device ``d``.
+        Unheld victims first; a held (queued) operand spills only under
+        capacity pressure and faults back in when its query executes."""
         protected = {id(p) for p in protect}
-        for cbv in list(self._lru.values()):
-            if cbv.pinned or id(cbv) in protected or not cbv.slots:
-                continue
-            if all(dd != d for dd, _ in cbv.slots):
-                continue
-            self.spill(cbv)
-            return True
+        for force_held in (False, True):
+            for cbv in list(self._lru.values()):
+                if cbv.pinned or id(cbv) in protected or not cbv.slots:
+                    continue
+                if self.is_held(cbv) and not force_held:
+                    continue
+                if all(dd != d for dd, _ in cbv.slots):
+                    continue
+                self.spill(cbv, _force_held=force_held)
+                return True
         return False
 
     def _alloc_on(self, d: int, n_rows: int,
@@ -506,9 +511,17 @@ class PimCluster(LruSpillBase):
 
 @dataclasses.dataclass
 class ClusterReport:
-    """What one sharded planner execution did, and what it cost."""
+    """What one sharded planner execution did, and what it cost.
+
+    ``per_bank`` is the full ledger delta keyed by ``(device, bank)`` -
+    the resource grain the async scheduler packs epochs by (banks of
+    different devices are independent execution resources; channel
+    transfers serialize and are reported separately in
+    ``transfer_ns``)."""
 
     per_device_ns: Dict[int, float] = dataclasses.field(default_factory=dict)
+    per_bank: Dict[Tuple[int, int], OpStats] = dataclasses.field(
+        default_factory=dict)
     transferred_rows: int = 0       # cross-device colocation moves
     transfer_ns: float = 0.0
     transfer_bytes: int = 0
@@ -529,6 +542,22 @@ class ClusterPlanner:
     def __init__(self, cluster: PimCluster):
         self.cluster = cluster
         self.last_report: Optional[ClusterReport] = None
+
+    def footprint(self, env: Dict[str, ClusterBitVector]) -> frozenset:
+        """``(device, bank)`` resources the operands occupy - the epoch
+        admission signal for the async scheduler. A spilled operand
+        faults back in at placement-chosen devices, so it conservatively
+        claims every bank of every device."""
+        cl = self.cluster
+        out = set()
+        for nm in sorted(env):
+            cbv = env[nm]
+            if cbv.spilled:
+                return frozenset(
+                    (d, b) for d in range(cl.n_devices)
+                    for b in range(len(cl.devices[d].banks)))
+            out.update((d, s[0]) for d, s in cbv.slots)
+        return frozenset(out)
 
     def execute(self, expression: E.Expr,
                 env: Dict[str, ClusterBitVector],
@@ -585,7 +614,10 @@ class ClusterPlanner:
                     for k, i in enumerate(idxs):
                         dst[i] = (d, res.slots[k])
                     res.slots = []  # ownership moves to the cluster handle
-                    dev_stats[d] = cl.planners[d].last_report.stats
+                    sub_rep = cl.planners[d].last_report
+                    dev_stats[d] = sub_rep.stats
+                    for b, st in sub_rep.per_bank.items():
+                        report.per_bank[(d, b)] = st
             except AmbitError:
                 for ds in dst:
                     if ds is not None:

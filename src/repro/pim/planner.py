@@ -37,13 +37,24 @@ from .store import PimStore, ResidentBitVector
 
 @dataclasses.dataclass
 class PlanReport:
-    """What one planner execution did, and what it cost."""
+    """What one planner execution did, and what it cost.
+
+    ``per_bank`` holds the full per-bank ledger delta (ns/energy/AAPs
+    charged to each bank by THIS call) rather than only the merged
+    totals: the async scheduler packs bank-disjoint queries into one
+    epoch and needs per-resource deltas to account epoch time as
+    max-over-resources."""
 
     groups: int = 0                 # batched program dispatches
     migrated_rows: int = 0          # PSM migrations performed up front
     staged_rows: int = 0            # scratch stagings at execution time
-    per_bank_ns: Dict[int, float] = dataclasses.field(default_factory=dict)
+    per_bank: Dict[int, OpStats] = dataclasses.field(default_factory=dict)
     stats: OpStats = dataclasses.field(default_factory=OpStats)
+
+    @property
+    def per_bank_ns(self) -> Dict[int, float]:
+        """Banks that burned time in this call (back-compat view)."""
+        return {b: st.ns for b, st in self.per_bank.items() if st.ns > 0.0}
 
 
 class QueryPlanner:
@@ -71,6 +82,22 @@ class QueryPlanner:
                     "bbop operands must be row-aligned and equal-sized "
                     "(Section 5.3)")
         return names, first
+
+    def footprint(self, env: Dict[str, ResidentBitVector]
+                  ) -> frozenset:
+        """``(device, bank)`` resources the operands occupy (device is
+        always 0 on a single-device store). Destinations are co-located
+        with their operands, so this is the conservative resource set the
+        async scheduler packs epochs by; spilled operands fault back in
+        at an allocator-chosen location, so they claim every bank."""
+        out = set()
+        n_banks = len(self.store.device.banks)
+        for nm in sorted(env):
+            rbv = env[nm]
+            if rbv.spilled:
+                return frozenset((0, b) for b in range(n_banks))
+            out.update((0, s[0]) for s in rbv.slots)
+        return frozenset(out)
 
     def _bank_totals(self) -> Dict[int, CommandStats]:
         dev = self.store.device
@@ -149,8 +176,11 @@ class QueryPlanner:
 
         after = self._bank_totals()
         deltas = {bi: _delta(after[bi], before[bi]) for bi in after}
-        report.per_bank_ns = {bi: d.ns for bi, d in deltas.items()
-                              if d.ns > 0.0}
+        report.per_bank = {
+            bi: OpStats(ns=d.ns, energy_nj=d.energy_nj,
+                        aap_count=d.aap_count)
+            for bi, d in deltas.items()
+            if d.ns > 0.0 or d.energy_nj > 0.0 or d.aap_count}
         report.stats = OpStats(
             ns=max((d.ns for d in deltas.values()), default=0.0),
             energy_nj=sum(d.energy_nj for d in deltas.values()),

@@ -42,6 +42,7 @@ from .allocator import STRIPED
 from .cluster import (ChannelModel, ClusterBitVector, PimCluster,
                       ROUND_ROBIN)
 from .planner import QueryPlanner
+from .scheduler import AsyncScheduler, DrainReport, Ticket
 from .store import PimStore, ResidentBitVector
 
 
@@ -78,6 +79,8 @@ class AmbitRuntime:
             self.planner = QueryPlanner(self.store, optimize=optimize,
                                         colocate=colocate)
             self._handle_type = ResidentBitVector
+        self.scheduler = AsyncScheduler(self.store, self.planner,
+                                        self._handle_type)
         self.session_stats = OpStats()
         self.last_stats: Optional[OpStats] = None
 
@@ -130,6 +133,38 @@ class AmbitRuntime:
             (self.store.bytes_from_device - rd_before)
         self._account(st)
         return out
+
+    # -- async multi-query sessions -------------------------------------------
+
+    def submit(self, expression: E.Expr, env: Dict[str, object],
+               out=None, out_name: Optional[str] = None) -> Ticket:
+        """Enqueue a query for the next ``drain``. Operands are resident
+        handles or tickets of earlier submits (multi-root DAGs execute in
+        one drain); queued operands are protected from eviction until
+        their query runs. Returns the query's Ticket."""
+        for nm, v in env.items():
+            if not isinstance(v, (self._handle_type, Ticket)):
+                raise TypeError(
+                    f"operand {nm!r} is not resident - call put() first "
+                    "(the host path is BulkBitwiseEngine.eval)")
+        return self.scheduler.submit(expression, env, out=out,
+                                     out_name=out_name)
+
+    def drain(self):
+        """Execute every queued query, overlapping bank/device-disjoint
+        queries in epochs. Returns the tickets in submit order; the
+        drain's combined cost (sum of epoch maxima, summed energy/AAPs,
+        fault-in bytes) lands in ``last_stats`` / ``session_stats``."""
+        tickets = self.scheduler.drain()
+        if tickets:
+            st = OpStats()
+            st += self.scheduler.last_drain.stats
+            self._account(st)
+        return tickets
+
+    @property
+    def last_drain(self) -> Optional[DrainReport]:
+        return self.scheduler.last_drain
 
     def _binop(self, op: str, a, b):
         return self.eval(binop_expr(op), {"a": a, "b": b})

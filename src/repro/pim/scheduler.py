@@ -1,0 +1,381 @@
+"""AsyncScheduler: overlap independent queries across banks and devices.
+
+The paper's core claim is internal parallelism - every bank (and, one
+level up, every device of a cluster) can run a bbop concurrently - yet
+``QueryPlanner.execute`` serves ONE query at a time: it already reports
+max-over-banks time *within* a query, but a second user's session waits
+for the first. The scheduler converts the runtime to a queued execution
+model that overlaps independent sessions:
+
+  * ``submit(expr, env)`` enqueues a query and returns a ``Ticket``.
+    Operands are *held* from the moment they are queued: the LRU spiller
+    prefers any unheld victim and ``free`` refuses them, so a
+    queued-but-not-executed operand is never evicted while anything else
+    can make room (under genuine capacity pressure the coldest queued
+    operand spills last-resort and faults back in when its query runs,
+    charged to that query's ticket). Environment
+    values may be other tickets (multi-root DAGs: a later query consumes
+    an earlier query's result without a drain in between), and ``out=``
+    rebinds the result into an existing handle in place.
+
+  * ``drain()`` packs the queue into **epochs** by the ``(device, bank)``
+    resources each query's operands occupy: queries touching disjoint
+    banks land in the same epoch and run concurrently, so epoch time is
+    the max over resources of the time charged to each resource - not the
+    sum over queries. Conflicts force later epochs: overlapping bank
+    footprints (a bank runs one bbop at a time), reading a handle an
+    earlier query writes, and two queries writing the same destination
+    handle never share an epoch; submit order is the deterministic
+    tiebreak throughout (greedy first-fit in ticket order, no hash-order
+    iteration anywhere).
+
+Accounting is conservation-exact: queries execute in submit order under
+the hood (epochs are a packing/accounting construct, never a reorder),
+so summed energy and AAP counts are *identical* to serial ``eval`` of the
+same queries, results are bit-identical, and reported time is the sum of
+epoch maxima - always <= the serial sum, with equality when every query
+contends for one bank. Cross-device channel transfers serialize within
+an epoch (their ns adds on top of the epoch's compute max), and a
+spilled operand faulting back in during ``drain`` is charged to that
+query's ticket stats.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from ..core import expr as E
+from ..core.engine import OpStats
+from ..core.simulator import AmbitError
+
+Resource = Tuple[int, int]          # (device index, bank index)
+
+QUEUED = "queued"
+DONE = "done"
+FAILED = "failed"
+CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass(eq=False)
+class Ticket:
+    """One submitted query. ``result`` and ``stats`` are populated by the
+    drain that executes it; ``epoch`` is its position in the drain's
+    epoch schedule. Tickets order (and resolve ties) by ``index``, the
+    global submit sequence number."""
+
+    scheduler: "AsyncScheduler"
+    index: int
+    expression: E.Expr
+    env: Dict[str, object]          # name -> handle or Ticket
+    out: Optional[object] = None    # existing handle to rebind in place
+    out_name: Optional[str] = None
+    state: str = QUEUED
+    epoch: int = -1
+    result: Optional[object] = None
+    stats: OpStats = dataclasses.field(default_factory=OpStats)
+    # per-resource ns this query charged, measured from the planner's
+    # per-bank ledger deltas (keys normalized to (device, bank))
+    resource_ns: Dict[Resource, float] = dataclasses.field(
+        default_factory=dict)
+    channel_ns: float = 0.0         # serialized cross-device transfer time
+
+    def __repr__(self):
+        return (f"<Ticket #{self.index} {self.state}"
+                f"{f' epoch={self.epoch}' if self.epoch >= 0 else ''}>")
+
+
+@dataclasses.dataclass
+class EpochReport:
+    """One epoch of a drain: the tickets that shared it, the resources
+    they claimed, and the epoch's critical-path time (max over resources
+    of summed per-resource ns, plus serialized channel transfers)."""
+
+    tickets: List[int] = dataclasses.field(default_factory=list)
+    resources: List[Resource] = dataclasses.field(default_factory=list)
+    ns: float = 0.0
+    channel_ns: float = 0.0
+
+
+@dataclasses.dataclass
+class DrainReport:
+    """What one drain did. ``stats.ns`` is the sum of epoch maxima;
+    energy/AAPs/bytes are plain sums over the drained tickets (identical
+    to serial evaluation by construction). ``serial_ns`` is what the same
+    queries would have reported executed one eval at a time."""
+
+    epochs: List[EpochReport] = dataclasses.field(default_factory=list)
+    stats: OpStats = dataclasses.field(default_factory=OpStats)
+    serial_ns: float = 0.0
+
+    @property
+    def n_queries(self) -> int:
+        return sum(len(e.tickets) for e in self.epochs)
+
+
+class AsyncScheduler:
+    """Submit/drain queue over one PimStore+QueryPlanner (single device)
+    or PimCluster+ClusterPlanner (sharded) pair."""
+
+    def __init__(self, store, planner, handle_type):
+        self.store = store
+        self.planner = planner
+        self._handle_type = handle_type
+        self.pending: List[Ticket] = []
+        self.drains = 0
+        self.last_drain: Optional[DrainReport] = None
+        self._submitted = 0
+
+    # -- submission ----------------------------------------------------------
+
+    def submit(self, expression: E.Expr, env: Dict[str, object],
+               out=None, out_name: Optional[str] = None) -> Ticket:
+        """Enqueue a query; returns its Ticket. Operands may be resident
+        handles or tickets of earlier-submitted queries (their result is
+        consumed without an intermediate drain). All operands are held -
+        protected from eviction and free - until the query executes."""
+        if not env:
+            raise ValueError("scheduler needs at least one operand")
+        resolved: Dict[str, object] = {}
+        held: List[object] = []     # rollback on validation failure
+        try:
+            for nm in sorted(env):
+                v = env[nm]
+                if isinstance(v, Ticket):
+                    if v.scheduler is not self:
+                        raise AmbitError(
+                            f"operand {nm!r} is a ticket of another "
+                            "scheduler")
+                    if v.state == DONE:  # earlier drain: use the result
+                        v = v.result
+                    elif v.state != QUEUED:
+                        raise AmbitError(
+                            f"operand {nm!r} is a {v.state} ticket")
+                if isinstance(v, Ticket):
+                    resolved[nm] = v
+                elif isinstance(v, self._handle_type):
+                    self.store._check_handle(v)
+                    self.store.hold(v)
+                    held.append(v)
+                    resolved[nm] = v
+                else:
+                    raise TypeError(
+                        f"operand {nm!r} is not resident or a ticket - "
+                        "call put() first")
+            if out is not None:
+                if not isinstance(out, self._handle_type):
+                    raise TypeError(
+                        "out= must be an existing resident handle")
+                self.store._check_handle(out)
+                self.store.hold(out)
+                held.append(out)
+        except Exception:
+            for h in held:
+                self.store.release(h)
+            raise
+        t = Ticket(scheduler=self, index=self._submitted,
+                   expression=expression, env=resolved, out=out,
+                   out_name=out_name)
+        self._submitted += 1
+        self.pending.append(t)
+        return t
+
+    def cancel(self, ticket: Ticket) -> None:
+        """Drop a queued ticket and release its operand holds. Queries
+        already submitted that consume this ticket will fail at drain."""
+        if ticket.state != QUEUED or ticket not in self.pending:
+            raise AmbitError(f"cannot cancel {ticket!r}")
+        self.pending.remove(ticket)
+        self._release_ticket_holds(ticket)
+        ticket.state = CANCELLED
+
+    def _release_ticket_holds(self, t: Ticket) -> None:
+        for nm in sorted(t.env):
+            v = t.env[nm]
+            if isinstance(v, Ticket):
+                if v.state == DONE:     # post-execution result hold
+                    self.store.release(v.result)
+            else:
+                self.store.release(v)
+        if t.out is not None:
+            self.store.release(t.out)
+
+    # -- footprints ----------------------------------------------------------
+
+    def _footprint(self, t: Ticket,
+                   cache: Dict[int, frozenset]) -> frozenset:
+        """(device, bank) resources ticket ``t`` will touch. A dependency
+        ticket contributes its own footprint (its result is co-located
+        with its operands by the planner's destination policy)."""
+        if id(t) in cache:
+            return cache[id(t)]
+        res: set = set()
+        for nm in sorted(t.env):
+            v = t.env[nm]
+            if isinstance(v, Ticket):
+                res |= self._footprint(v, cache)
+            else:
+                res |= self.planner.footprint({nm: v})
+        if t.out is not None:
+            res |= self.planner.footprint({"out": t.out})
+        fp = frozenset(res)
+        cache[id(t)] = fp
+        return fp
+
+    # -- epoch formation ------------------------------------------------------
+
+    def _form_epochs(self, tickets: List[Ticket]) -> List[EpochReport]:
+        """Greedy first-fit in submit order (the deterministic tiebreak):
+        each ticket lands in the earliest epoch that (a) is after every
+        epoch its dependencies and handle conflicts require, and (b) has
+        no (device, bank) resource overlap with tickets already in it."""
+        cache: Dict[int, frozenset] = {}
+        epochs: List[EpochReport] = []
+        epoch_resources: List[set] = []
+        this_drain = {id(t): t for t in tickets}
+        assigned: Dict[int, int] = {}       # id(ticket) -> epoch
+        last_writer: Dict[int, int] = {}    # id(handle) -> epoch
+        last_reader: Dict[int, int] = {}
+        for t in tickets:
+            fp = self._footprint(t, cache)
+            floor = 0
+            for nm in sorted(t.env):
+                v = t.env[nm]
+                if isinstance(v, Ticket):       # result-after-execute
+                    if id(v) not in this_drain:
+                        raise AmbitError(
+                            f"operand {nm!r} of ticket #{t.index} is a "
+                            f"{v.state} ticket not part of this drain")
+                    floor = max(floor, assigned[id(v)] + 1)
+                else:                           # read-after-write
+                    floor = max(floor,
+                                last_writer.get(id(v), -1) + 1)
+            if t.out is not None:
+                # never share an epoch with another writer of the same
+                # destination, nor with anyone still reading its old value
+                floor = max(floor, last_writer.get(id(t.out), -1) + 1,
+                            last_reader.get(id(t.out), -1) + 1)
+            e = floor
+            while e < len(epochs) and (epoch_resources[e] & fp):
+                e += 1
+            if e == len(epochs):
+                epochs.append(EpochReport())
+                epoch_resources.append(set())
+            epochs[e].tickets.append(t.index)
+            epoch_resources[e] |= fp
+            assigned[id(t)] = e
+            t.epoch = e
+            for nm in sorted(t.env):
+                v = t.env[nm]
+                if isinstance(v, Ticket):
+                    # result handles are born inside this drain, so no
+                    # pre-existing out= can alias them: the dep's
+                    # epoch+1 floor above is the only ordering needed
+                    continue
+                last_reader[id(v)] = max(last_reader.get(id(v), -1), e)
+            if t.out is not None:
+                last_writer[id(t.out)] = e
+        for e, rep in enumerate(epochs):
+            rep.resources = sorted(epoch_resources[e])
+        return epochs
+
+    # -- execution ------------------------------------------------------------
+
+    def drain(self) -> List[Ticket]:
+        """Execute every queued query and return the tickets in submit
+        order. Execution order IS submit order - epochs only change how
+        time is accounted - so energy/AAP ledgers are identical to serial
+        evaluation and results are bit-identical."""
+        tickets, self.pending = self.pending, []
+        if not tickets:
+            return []
+        consumers: Dict[int, int] = {}      # id(dep ticket) -> # readers
+        for t in tickets:
+            for v in t.env.values():
+                if isinstance(v, Ticket):
+                    consumers[id(v)] = consumers.get(id(v), 0) + 1
+        current: Optional[Ticket] = None
+        try:
+            epochs = self._form_epochs(tickets)
+            for t in tickets:
+                current = t
+                self._execute(t)
+                # keep results alive for queued consumers, one hold each
+                n = consumers.get(id(t), 0)
+                for _ in range(n):
+                    self.store.hold(t.result)
+        except Exception:
+            # release every hold the dropped tickets still own (a failed
+            # epoch formation drops them all) so no handle leaks a hold
+            for u in tickets:
+                if u.state == QUEUED:
+                    u.state = FAILED if u is current else CANCELLED
+                    self._release_ticket_holds(u)
+            raise
+        # accounting: epoch ns = max over resources of summed per-resource
+        # ns, plus the epoch's serialized channel transfers
+        report = DrainReport()
+        by_index = {t.index: t for t in tickets}
+        total = OpStats()
+        for erep in epochs:
+            per_res: Dict[Resource, float] = {}
+            for ti in erep.tickets:
+                t = by_index[ti]
+                for r in sorted(t.resource_ns):
+                    per_res[r] = per_res.get(r, 0.0) + t.resource_ns[r]
+                erep.channel_ns += t.channel_ns
+            erep.ns = max(per_res.values(), default=0.0) + erep.channel_ns
+            report.epochs.append(erep)
+            total.ns += erep.ns
+            total.channel_ns += erep.channel_ns
+        for t in tickets:
+            total.energy_nj += t.stats.energy_nj
+            total.aap_count += t.stats.aap_count
+            total.bytes_touched += t.stats.bytes_touched
+            total.channel_bytes += t.stats.channel_bytes
+            report.serial_ns += t.stats.ns
+        report.stats = total
+        self.last_drain = report
+        self.drains += 1
+        return tickets
+
+    def _execute(self, t: Ticket) -> None:
+        """Run one query through the planner (fault-ins charged to its
+        ticket), release its operand holds, and publish the result."""
+        store = self.store
+        env = {nm: (v.result if isinstance(v, Ticket) else v)
+               for nm, v in t.env.items()}
+        operands = list(env.values())
+        up0, rd0 = store.bytes_to_device, store.bytes_from_device
+        for v in operands:
+            store.ensure_resident(v, protect=operands)
+        res = self.planner.execute(t.expression, env, out_name=t.out_name)
+        rep = self.planner.last_report
+        st = OpStats()
+        st += rep.stats
+        st.bytes_touched += (store.bytes_to_device - up0) + \
+            (store.bytes_from_device - rd0)
+        t.stats = st
+        t.resource_ns = {
+            (k if isinstance(k, tuple) else (0, k)): bank_stats.ns
+            for k, bank_stats in rep.per_bank.items()}
+        t.channel_ns = getattr(rep, "transfer_ns", 0.0)
+        t.result = self._rebind(t.out, res) if t.out is not None else res
+        self._release_ticket_holds(t)
+        t.state = DONE
+
+    def _rebind(self, out, res):
+        """Move the fresh result rows into an existing destination handle
+        (identity-preserving in-place write: no device copy, the old rows
+        are freed)."""
+        if (out.n_bits, out.shape) != (res.n_bits, res.shape):
+            raise AmbitError(
+                f"out= handle shape mismatch: {out!r} vs result {res!r}")
+        self.store._release_rows(out)       # no-op when out is spilled
+        out.slots, res.slots = res.slots, []
+        self.store._unregister(res)
+        out.spilled = False
+        out.dirty = True
+        out._host = None
+        self.store._register(out)
+        return out

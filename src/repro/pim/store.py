@@ -152,6 +152,27 @@ class LruSpillBase:
         self.evicted_clean = 0
         self.evicted_dirty = 0
         self._lru: "OrderedDict[int, object]" = OrderedDict()
+        # Hold refcounts: handles queued in an AsyncScheduler but not yet
+        # executed must survive until their query runs - they are skipped
+        # by eviction and cannot be freed or explicitly spilled.
+        self._held: Dict[int, int] = {}
+
+    def hold(self, rbv) -> None:
+        """Protect a handle from eviction/free until ``release``. Refcounted:
+        the scheduler holds each operand once per queued query that reads
+        it."""
+        self._check_handle(rbv)
+        self._held[id(rbv)] = self._held.get(id(rbv), 0) + 1
+
+    def release(self, rbv) -> None:
+        n = self._held.get(id(rbv), 0) - 1
+        if n <= 0:
+            self._held.pop(id(rbv), None)
+        else:
+            self._held[id(rbv)] = n
+
+    def is_held(self, rbv) -> bool:
+        return id(rbv) in self._held
 
     def _register(self, rbv) -> None:
         self._lru[id(rbv)] = rbv
@@ -164,13 +185,18 @@ class LruSpillBase:
     def _unregister(self, rbv) -> None:
         self._lru.pop(id(rbv), None)
 
-    def spill(self, rbv) -> None:
+    def spill(self, rbv, _force_held: bool = False) -> None:
         """Evict a handle's device rows back to host. Clean handles cost
         zero channel bytes; dirty ones are read back through the ledger
-        first."""
+        first. Held (queued) handles refuse unless ``_force_held`` - the
+        eviction loops set it only when nothing unheld can make room, and
+        the spilled operand faults back in when its query executes."""
         self._check_live(rbv)
         if rbv.pinned:
             raise AmbitError(f"cannot spill pinned {rbv!r}")
+        if self.is_held(rbv) and not _force_held:
+            raise AmbitError(
+                f"cannot spill {rbv!r}: a queued query still reads it")
         if rbv.dirty or rbv._host is None:
             self._read_back(rbv)
             self.evicted_dirty += 1
@@ -191,6 +217,10 @@ class LruSpillBase:
 
     def free(self, rbv) -> None:
         self._check_handle(rbv)
+        if self.is_held(rbv):
+            raise AmbitError(
+                f"cannot free {rbv!r}: a queued query still reads it "
+                "(drain the scheduler first)")
         self._release_rows(rbv)
         self._unregister(rbv)
         rbv.spilled = False
@@ -296,15 +326,21 @@ class PimStore(LruSpillBase):
         return rbv
 
     def _evict_one(self, protect: Iterable[ResidentBitVector]) -> bool:
-        """Spill the least-recently-used evictable handle. Returns False
+        """Spill the least-recently-used evictable handle. Unheld victims
+        are preferred; under capacity pressure a held (queued) operand of
+        a not-yet-executed query is spilled as a last resort - it faults
+        back in when its query runs, charged to that query. Returns False
         when every registered handle is pinned or protected (after giving
         a cluster-installed fallback the chance to evict at its scope)."""
         protected = {id(p) for p in protect}
-        for rbv in list(self._lru.values()):
-            if rbv.pinned or id(rbv) in protected or not rbv.slots:
-                continue
-            self.spill(rbv)
-            return True
+        for force_held in (False, True):
+            for rbv in list(self._lru.values()):
+                if rbv.pinned or id(rbv) in protected or not rbv.slots:
+                    continue
+                if self.is_held(rbv) and not force_held:
+                    continue
+                self.spill(rbv, _force_held=force_held)
+                return True
         if self.spill_fallback is not None:
             return self.spill_fallback()
         return False

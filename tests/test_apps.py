@@ -35,6 +35,35 @@ def test_bitmap_index_query(engine):
         assert stats.ns > 0 and stats.energy_nj > 0
 
 
+def test_bitmap_weekly_query_batches_one_drain():
+    """The resident weekly_active_query submits the AND-of-weeks root and
+    every per-week AND as ONE multi-root batch: the scheduler ledger
+    shows a single drain of weeks+1 queries instead of one eval per week,
+    and the answers still match the host path exactly."""
+    from repro.apps.bitmap_index import BitmapIndex
+    from repro.core import DRAMGeometry
+    from repro.pim import AmbitRuntime
+
+    rng = np.random.default_rng(31)
+    n_users = 1200
+    weeks = [f"w{i}" for i in range(4)]
+    host = BitmapIndex(n_users, BulkBitwiseEngine("jnp"))
+    rt = AmbitRuntime(DRAMGeometry(rows_per_subarray=32), banks=4,
+                      subarrays=2, words=2, scratch_rows=2, seed=13)
+    res = BitmapIndex(n_users, runtime=rt)
+    for w in weeks + ["male"]:
+        members = rng.choice(n_users, n_users // 3, replace=False)
+        host.add(w, members)
+        res.add(w, members)
+    want_u, want_pw, _ = host.weekly_active_query(weeks, "male")
+    got_u, got_pw, stats = res.weekly_active_query(weeks, "male")
+    assert (got_u, got_pw) == (want_u, want_pw)
+    assert rt.scheduler.drains == 1              # one drain, not w evals
+    assert rt.last_drain.n_queries == len(weeks) + 1
+    assert rt.last_drain.stats.ns <= rt.last_drain.serial_ns + 1e-9
+    assert stats.ns > 0 and stats.energy_nj > 0
+
+
 def test_bitweaving_column_scan():
     from repro.apps.bitweaving_db import BitWeavingColumn
     vals = RNG.integers(0, 2**10, 5000).astype(np.uint32)

@@ -1,0 +1,413 @@
+"""Async multi-query scheduler: differential concurrency suite.
+
+The scheduler overlaps independent queries across banks and devices; the
+harness proves that overlap never changes WHAT is computed, only how time
+is accounted:
+
+  * random mixes of N queries over shared/disjoint operands are
+    bit-identical to serial ``eval`` with energy/AAP conservation, and
+    drain time <= serial time (equality when every query contends for
+    one bank);
+  * epoch formation is a deterministic function of submit order - two
+    writers of one destination handle never share an epoch, dependency
+    tickets execute in earlier epochs than their consumers, and two
+    identical sessions produce byte-identical ledgers (the CI
+    pim-determinism job re-runs this shard and diffs the recorded
+    ledgers across processes / hash seeds);
+  * queued-but-not-executed operands are protected from LRU eviction and
+    from ``free``, and a spilled operand faulting back in during drain
+    is charged to the ticket of the query that needed it.
+
+Property tests run under hypothesis when installed; without it they fall
+back to deterministic seeded sweeps over the same generators.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import AmbitError, BitVector, DRAMGeometry, Expr, maj
+from repro.pim import AmbitRuntime
+
+GEOM = DRAMGeometry(rows_per_subarray=32)  # 14 data rows: compact devices
+RNG = np.random.default_rng(23)
+
+X, Y, Z = Expr.var("x"), Expr.var("y"), Expr.var("z")
+
+
+def rand_expr(rng, depth=0):
+    if depth > 2 or rng.integers(2):
+        return (X, Y, Z)[rng.integers(3)]
+    op = ("and", "or", "xor", "not", "maj")[rng.integers(5)]
+    if op == "not":
+        return ~rand_expr(rng, depth + 1)
+    if op == "maj":
+        return maj(rand_expr(rng, depth + 1), rand_expr(rng, depth + 1),
+                   rand_expr(rng, depth + 1))
+    a, b = rand_expr(rng, depth + 1), rand_expr(rng, depth + 1)
+    return {"and": a & b, "or": a | b, "xor": a ^ b}[op]
+
+
+def _rt(devices=1, banks=2, **kw):
+    kw.setdefault("subarrays", 2)
+    kw.setdefault("words", 2)
+    kw.setdefault("seed", 3)
+    return AmbitRuntime(GEOM, banks=banks, devices=devices, **kw)
+
+
+# -- differential concurrency suite -------------------------------------------
+
+
+def check_async_matches_serial(seed, devices):
+    """Random mix of queries over shared/disjoint operands: submit+drain
+    must be bit-identical to serial eval of the same queries, with summed
+    energy/AAPs conserved exactly and drain time <= serial time."""
+    rng = np.random.default_rng(seed)
+    n_bits = int(rng.integers(1, 600))
+    n_base = int(rng.integers(3, 6))
+    n_queries = int(rng.integers(2, 6))
+    bits = rng.integers(0, 2, (n_base, n_bits)).astype(bool)
+    queries = []
+    for _ in range(n_queries):
+        expr = rand_expr(rng)
+        if expr.op in ("var", "lit"):
+            expr = expr ^ Y
+        picks = rng.integers(0, n_base, 3)  # shared AND disjoint operands
+        queries.append((expr, picks))
+
+    rt_s = _rt(devices=devices, seed=seed % 5)
+    rt_a = _rt(devices=devices, seed=seed % 5)
+    vs_s = [rt_s.put(BitVector.from_bits(b)) for b in bits]
+    vs_a = [rt_a.put(BitVector.from_bits(b)) for b in bits]
+
+    serial, serial_ns, serial_e, serial_aap = [], 0.0, 0.0, 0
+    for expr, picks in queries:
+        out = rt_s.eval(expr, {k: vs_s[picks[i]]
+                               for i, k in enumerate("xyz")})
+        serial_ns += rt_s.last_stats.ns
+        serial_e += rt_s.last_stats.energy_nj
+        serial_aap += rt_s.last_stats.aap_count
+        serial.append(np.asarray(rt_s.get(out).bits()))
+
+    tickets = [rt_a.submit(expr, {k: vs_a[picks[i]]
+                                  for i, k in enumerate("xyz")})
+               for expr, picks in queries]
+    assert rt_a.drain() == tickets          # stable ticket ordering
+    drain = rt_a.last_drain
+    for t, want in zip(tickets, serial):
+        assert t.state == "done" and t.epoch >= 0
+        assert np.array_equal(np.asarray(rt_a.get(t.result).bits()), want)
+    # conservation: same planner calls in the same order as serial
+    assert drain.stats.energy_nj == pytest.approx(serial_e, rel=1e-12)
+    assert drain.stats.aap_count == serial_aap
+    assert drain.serial_ns == pytest.approx(serial_ns, rel=1e-12)
+    assert drain.stats.ns <= serial_ns + 1e-9
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.sampled_from([1, 3]))
+    def test_async_matches_serial_random(seed, devices):
+        check_async_matches_serial(seed, devices)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("devices", [1, 3])
+    def test_async_matches_serial_random(seed, devices):
+        check_async_matches_serial(seed, devices)
+
+
+def test_single_bank_contention_equals_serial():
+    """When every query contends for the one bank there is nothing to
+    overlap: each epoch is a singleton and drain time == serial time."""
+    rt_s = _rt(banks=1, subarrays=1, scratch_rows=2)
+    rt_a = _rt(banks=1, subarrays=1, scratch_rows=2)
+    bits = RNG.integers(0, 2, (2, 256)).astype(bool)
+    ops_s = [rt_s.put(BitVector.from_bits(b)) for b in bits]
+    ops_a = [rt_a.put(BitVector.from_bits(b)) for b in bits]
+    exprs = [X & Y, X | Y, X ^ Y]
+    serial_ns = 0.0
+    for e in exprs:
+        rt_s.eval(e, {"x": ops_s[0], "y": ops_s[1]})
+        serial_ns += rt_s.last_stats.ns
+    tickets = [rt_a.submit(e, {"x": ops_a[0], "y": ops_a[1]})
+               for e in exprs]
+    rt_a.drain()
+    assert [t.epoch for t in tickets] == [0, 1, 2]
+    assert rt_a.last_drain.stats.ns == pytest.approx(serial_ns)
+
+
+def test_disjoint_banks_share_one_epoch():
+    """Queries whose operands occupy disjoint banks run in ONE epoch:
+    drain time is the max over the queries, not the sum."""
+    n_queries = 4
+    rt = _rt(banks=n_queries, subarrays=2)
+    tickets = []
+    for q in range(n_queries):
+        bits = RNG.integers(0, 2, (2, 2 * 128)).astype(bool)
+        a = rt.put(BitVector.from_bits(bits[0]),
+                   near=[(q, s, 0) for s in range(2)])
+        b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+        tickets.append((rt.submit(X & Y, {"x": a, "y": b}), bits))
+    rt.drain()
+    drain = rt.last_drain
+    assert [t.epoch for t, _ in tickets] == [0] * n_queries
+    assert len(drain.epochs) == 1
+    per_query = [t.stats.ns for t, _ in tickets]
+    assert drain.stats.ns == pytest.approx(max(per_query))
+    assert drain.serial_ns == pytest.approx(sum(per_query))
+    for t, bits in tickets:
+        assert np.array_equal(np.asarray(rt.get(t.result).bits()),
+                              bits[0] & bits[1])
+
+
+def test_cluster_disjoint_devices_share_one_epoch():
+    """Device-level epoch admission: queries pinned to different cluster
+    devices overlap even when they use the same bank indices."""
+    rt = _rt(devices=3, banks=2)
+    tickets = []
+    for q in range(3):
+        bits = RNG.integers(0, 2, (2, 2 * 128)).astype(bool)
+        near = [(q, (i % 2, 0, 0)) for i in range(2)]  # chunk-aligned
+        a = rt.put(BitVector.from_bits(bits[0]), near=near)
+        b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+        tickets.append((rt.submit(X ^ Y, {"x": a, "y": b}), bits))
+    rt.drain()
+    assert [t.epoch for t, _ in tickets] == [0, 0, 0]
+    for t, bits in tickets:
+        assert {d for d, _ in t.result.slots} <= {tickets.index((t, bits))}
+        assert np.array_equal(np.asarray(rt.get(t.result).bits()),
+                              bits[0] ^ bits[1])
+
+
+# -- epoch formation properties -----------------------------------------------
+
+
+def test_same_destination_never_shares_epoch():
+    """Two queries writing the same ``out=`` handle are write-write
+    conflicts: they never share an epoch, execute in submit order (last
+    write wins), and the destination handle keeps its identity."""
+    rt = _rt(banks=4)
+    bits = RNG.integers(0, 2, (3, 2 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]),
+               near=[(0, 0, 0), (0, 1, 0)])
+    b = rt.put(BitVector.from_bits(bits[1]),
+               near=[(1, 0, 0), (1, 1, 0)])
+    o = rt.put(BitVector.from_bits(bits[2]),
+               near=[(2, 0, 0), (2, 1, 0)])
+    t1 = rt.submit(~X, {"x": a}, out=o)
+    t2 = rt.submit(~X, {"x": b}, out=o)
+    rt.drain()
+    assert t1.epoch != t2.epoch and t1.epoch < t2.epoch
+    assert t1.result is o and t2.result is o
+    assert np.array_equal(np.asarray(rt.get(o).bits()), ~bits[1])
+
+
+def test_reader_of_out_handle_orders_before_writer():
+    """A query reading a handle that a later query overwrites via out=
+    must land in an earlier epoch (no read-write epoch sharing)."""
+    rt = _rt(banks=4)
+    bits = RNG.integers(0, 2, (2, 2 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]),
+               near=[(0, 0, 0), (0, 1, 0)])
+    b = rt.put(BitVector.from_bits(bits[1]),
+               near=[(1, 0, 0), (1, 1, 0)])
+    t_read = rt.submit(~X, {"x": a})
+    t_write = rt.submit(~X, {"x": b}, out=a)
+    rt.drain()
+    assert t_read.epoch < t_write.epoch
+    assert np.array_equal(np.asarray(rt.get(t_read.result).bits()),
+                          ~bits[0])
+    assert np.array_equal(np.asarray(rt.get(a).bits()), ~bits[1])
+
+
+def test_ticket_dependency_orders_epochs():
+    """A query consuming an earlier ticket's result (multi-root DAG in
+    one drain) executes in a strictly later epoch."""
+    rt = _rt(banks=2)
+    bits = RNG.integers(0, 2, (3, 2 * 128)).astype(bool)
+    vs = [rt.put(BitVector.from_bits(b)) for b in bits]
+    t1 = rt.submit(X & Y, {"x": vs[0], "y": vs[1]})
+    t2 = rt.submit(X ^ Y, {"x": t1, "y": vs[2]})
+    rt.drain()
+    assert t1.epoch < t2.epoch
+    assert np.array_equal(np.asarray(rt.get(t2.result).bits()),
+                          (bits[0] & bits[1]) ^ bits[2])
+
+
+def _canonical_session():
+    """Fixed async session used for determinism checks: a mix of
+    bank-disjoint, shared-operand, dependent and out= queries."""
+    rt = _rt(banks=4, seed=7)
+    rng = np.random.default_rng(29)
+    bits = rng.integers(0, 2, (5, 2 * 128)).astype(bool)
+    vs = []
+    for q in range(4):
+        vs.append(rt.put(BitVector.from_bits(bits[q]),
+                         near=[(q, s, 0) for s in range(2)]))
+    o = rt.put(BitVector.from_bits(bits[4]), near=vs[0].slots)
+    t = [rt.submit(X & Y, {"x": vs[0], "y": vs[1]}),
+         rt.submit(X | Y, {"x": vs[2], "y": vs[3]}),
+         rt.submit(~X, {"x": vs[1]}, out=o)]
+    t.append(rt.submit(X ^ Y, {"x": t[0], "y": t[1]}))
+    rt.drain()
+    return rt, t
+
+
+def _ledger_text(rt, tickets):
+    d = rt.last_drain
+    epochs = [(e.ns, e.channel_ns, tuple(e.tickets), tuple(e.resources))
+              for e in d.epochs]
+    return (f"epochs={epochs} stats={d.stats!r} serial={d.serial_ns!r} "
+            f"assign={[t.epoch for t in tickets]}")
+
+
+def test_epoch_formation_deterministic(record_ledger):
+    """Submit order is the only tiebreak: two identical sessions produce
+    identical epoch schedules and ledgers. The recorded ledger is also
+    diffed across two whole CI runs (PYTHONHASHSEED sweep) by the
+    pim-determinism job."""
+    a = _ledger_text(*_canonical_session())
+    b = _ledger_text(*_canonical_session())
+    assert a == b
+    record_ledger("pim_scheduler_session", a)
+
+
+def test_per_bank_report_is_conservation_exact():
+    """The planner's per-bank ledger deltas decompose the merged report:
+    summed energy equals the merged energy, max ns equals the merged ns."""
+    rt = _rt(banks=2, colocate=False)
+    bits = RNG.integers(0, 2, (2, 4 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    rt.and_(a, b)
+    rep = rt.planner.last_report
+    assert len(rep.per_bank) == 2
+    assert sum(st.energy_nj for st in rep.per_bank.values()) == \
+        pytest.approx(rep.stats.energy_nj)
+    assert sum(st.aap_count for st in rep.per_bank.values()) == \
+        rep.stats.aap_count
+    assert max(st.ns for st in rep.per_bank.values()) == \
+        pytest.approx(rep.stats.ns)
+
+
+# -- queueing vs spill/eviction -----------------------------------------------
+
+
+def _tiny_rt():
+    """1 bank x 1 subarray x 12 usable rows."""
+    return _rt(banks=1, subarrays=1, scratch_rows=2, seed=5)
+
+
+def _bv(n_chunks):
+    return BitVector.from_bits(
+        RNG.integers(0, 2, n_chunks * 128).astype(bool))
+
+
+def test_queued_operands_are_not_evicted():
+    """A queued-but-not-yet-executed operand must survive evictions
+    forced by earlier queries in the same drain: the LRU skips held
+    handles and picks an unqueued victim instead."""
+    rt = _tiny_rt()
+    bits = RNG.integers(0, 2, (4, 2 * 128)).astype(bool)
+    c = rt.put(BitVector.from_bits(bits[0]))     # LRU: would be victim
+    d = rt.put(BitVector.from_bits(bits[1]))
+    cold = rt.put(_bv(4))                        # the only evictable rows
+    a = rt.put(BitVector.from_bits(bits[2]))
+    b = rt.put(BitVector.from_bits(bits[3]), near=a.slots)  # 12/12 live
+    t1 = rt.submit(X & Y, {"x": a, "y": b})      # dst rows force eviction
+    t2 = rt.submit(X ^ Y, {"x": c, "y": d})
+    rt.drain()
+    assert cold.spilled
+    assert not c.spilled and not d.spilled
+    assert np.array_equal(np.asarray(rt.get(t1.result).bits()),
+                          bits[2] & bits[3])
+    assert np.array_equal(np.asarray(rt.get(t2.result).bits()),
+                          bits[0] ^ bits[1])
+
+
+def test_queued_operand_cannot_be_freed_or_spilled():
+    rt = _tiny_rt()
+    bits = RNG.integers(0, 2, (2, 2 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    t = rt.submit(X | Y, {"x": a, "y": b})
+    with pytest.raises(AmbitError, match="queued"):
+        rt.free(a)
+    with pytest.raises(AmbitError, match="queued"):
+        rt.store.spill(b)
+    rt.drain()
+    assert np.array_equal(np.asarray(rt.get(t.result).bits()),
+                          bits[0] | bits[1])
+    rt.free(a)                                  # released after execution
+
+
+def test_spilled_operand_fault_in_charged_to_its_ticket():
+    """An operand spilled BEFORE submit faults back in during drain; the
+    upload bytes land on that query's ticket, not on the drain at large."""
+    rt = _tiny_rt()
+    bits = RNG.integers(0, 2, (2, 4 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]))
+    f = rt.put(_bv(4))                           # 12/12: device full
+    g = rt.put(_bv(4))                           # evicts the LRU: a
+    assert a.spilled and not b.spilled
+    t_cheap = rt.submit(~X, {"x": g})            # no fault-in needed
+    t_fault = rt.submit(X & Y, {"x": a, "y": b})
+    rt.drain()
+    assert not a.spilled
+    assert t_cheap.stats.bytes_touched == 0
+    assert t_fault.stats.bytes_touched >= a.device_bytes
+    assert np.array_equal(np.asarray(rt.get(t_fault.result).bits()),
+                          bits[0] & bits[1])
+    assert not f.freed                           # spilled, still usable
+
+
+def test_failed_submit_releases_partial_holds():
+    """A submit that fails validation mid-way (here: a non-resident
+    operand sorting after a valid one) must roll back the holds it
+    already took - the valid operand stays freeable."""
+    rt = _tiny_rt()
+    bits = RNG.integers(0, 2, (1, 2 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    with pytest.raises(TypeError, match="not resident"):
+        rt.submit(X & Y, {"a": a, "b": BitVector.from_bits(bits[0])})
+    rt.free(a)                                   # no hold leaked
+
+
+def test_failed_epoch_formation_releases_holds():
+    """A drain that dies in epoch formation (a consumer of a cancelled
+    ticket) must release every queued hold and mark the dropped tickets,
+    not leak them in a never-drainable limbo."""
+    rt = _tiny_rt()
+    bits = RNG.integers(0, 2, (3, 2 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    c = rt.put(BitVector.from_bits(bits[2]), near=a.slots)
+    t1 = rt.submit(X & Y, {"x": a, "y": b})
+    t2 = rt.submit(X ^ Y, {"x": t1, "y": c})
+    rt.scheduler.cancel(t1)
+    with pytest.raises(AmbitError, match="cancelled"):
+        rt.drain()
+    assert t2.state in ("failed", "cancelled")
+    rt.free(a), rt.free(b), rt.free(c)           # all holds released
+    assert rt.drain() == []                      # queue fully drained
+
+
+def test_cancel_releases_holds():
+    rt = _tiny_rt()
+    bits = RNG.integers(0, 2, (2, 2 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    t = rt.scheduler.submit(X & Y, {"x": a, "y": b})
+    rt.scheduler.cancel(t)
+    assert t.state == "cancelled"
+    rt.free(a)                                   # holds released
+    assert rt.drain() == []
