@@ -1,0 +1,78 @@
+"""Structural benchmark diff: compare two ``run.py --json`` outputs.
+
+Wall-clock numbers vary across machines; the *structure* of a benchmark
+run must not. Two runs are compared on:
+
+  * the set of row names (a renamed/dropped benchmark is a regression
+    signal in itself), and
+  * every ``key=value`` token in the derived metadata whose value is a
+    pure integer - op counts, ledger bytes, DRAM-model ns, epoch and
+    resource counts, measured row transfers. These are deterministic
+    model outputs; anything wall-clock-derived is formatted as a float /
+    ``...us`` / ``...x`` token and is deliberately ignored.
+
+Usage: ``python -m benchmarks.compare current.json baseline.json``
+Exit status 1 with a readable diff when the structures diverge.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+from typing import Dict
+
+_INT = re.compile(r"^-?\d+$")
+_TOKEN = re.compile(r"([A-Za-z_][\w.]*)=(\S+)")
+
+
+def structural(doc: dict) -> Dict[str, Dict[str, int]]:
+    """name -> {derived integer tokens} for one run.py --json document."""
+    out: Dict[str, Dict[str, int]] = {}
+    for row in doc["rows"]:
+        toks = {}
+        for key, val in _TOKEN.findall(row.get("derived", "")):
+            if _INT.match(val):
+                toks[key] = int(val)
+        out[row["name"]] = toks
+    return out
+
+
+def diff(current: dict, baseline: dict) -> list:
+    cur, base = structural(current), structural(baseline)
+    problems = []
+    for name in sorted(set(base) - set(cur)):
+        problems.append(f"missing benchmark row: {name}")
+    for name in sorted(set(cur) - set(base)):
+        problems.append(f"new benchmark row not in baseline: {name} "
+                        f"(re-generate the baseline)")
+    for name in sorted(set(cur) & set(base)):
+        ct, bt = cur[name], base[name]
+        for key in sorted(set(ct) | set(bt)):
+            if ct.get(key) != bt.get(key):
+                problems.append(
+                    f"{name}: {key}={ct.get(key)} vs baseline "
+                    f"{key}={bt.get(key)}")
+    return problems
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 2:
+        raise SystemExit(
+            "usage: python -m benchmarks.compare current.json baseline.json")
+    with open(argv[0]) as fh:
+        current = json.load(fh)
+    with open(argv[1]) as fh:
+        baseline = json.load(fh)
+    problems = diff(current, baseline)
+    if problems:
+        for p in problems:
+            print(p)
+        raise SystemExit(f"{len(problems)} structural difference(s)")
+    n = len(structural(current))
+    print(f"OK: {n} benchmark rows structurally identical to baseline")
+
+
+if __name__ == "__main__":
+    main()

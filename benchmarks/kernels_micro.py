@@ -265,6 +265,77 @@ def pim_async_multiquery(n_queries: int = 4, n_ops: int = 3,
     return out
 
 
+def pallas_resident_chain(n_ops: int = 6, rows: int = 64,
+                          n_queries: int = 4) -> List[Row]:
+    """Accelerator-resident DeviceStore vs the non-resident jnp path: a
+    ``n_ops``-AND dependent chain over ``rows`` x 8192-bit operands. The
+    non-resident engine ships every operand host->device and the result
+    back on EVERY op; the resident path uploads each operand once,
+    chains on-device through ``out=`` rebinds (donated buffers - no
+    allocation churn), and reads back only the final result - measured
+    ``bytes_touched`` must drop >= 2x. Then ``n_queries`` same-shape
+    queries submit+drain on the pallas backend: the epoch dispatches as
+    ONE stacked fused kernel (call-count probe), bit-identical to serial
+    eval."""
+    from repro.core import BitVector, BulkBitwiseEngine, Expr
+    from repro.kernels import ops as kops
+    from repro.pim import AmbitRuntime
+
+    rng = np.random.default_rng(0)
+    n_bits = 8192
+    bits = rng.integers(0, 2, (n_ops + 1, rows, n_bits)).astype(bool)
+    vecs = [BitVector.from_bits(b) for b in bits]
+
+    eng = BulkBitwiseEngine("jnp")
+
+    def host_chain():
+        acc, nbytes = vecs[0], 0
+        for bv in vecs[1:]:
+            acc = eng.and_(acc, bv)
+            nbytes += eng.last_stats.bytes_touched
+        return acc, nbytes
+
+    x, y = Expr.var("x"), Expr.var("y")
+
+    def resident_chain():
+        rt = AmbitRuntime(backend="pallas")
+        hs = [rt.put(bv) for bv in vecs]
+        acc = rt.and_(hs[0], hs[1])
+        for h in hs[2:]:                 # donated in-place rebinds
+            rt.eval(x & y, {"x": acc, "y": h}, out=acc)
+        rt.get(acc)
+        return rt, acc
+
+    us_host = _time(lambda: host_chain(), reps=2)
+    us_res = _time(lambda: resident_chain(), reps=2)
+    (host_acc, host_bytes), (rt, acc) = host_chain(), resident_chain()
+    res_bytes = rt.session_stats.bytes_touched
+    assert np.array_equal(np.asarray(rt.get(acc).bits()),
+                          np.asarray(host_acc.bits()))
+    assert host_bytes >= 2 * res_bytes, (host_bytes, res_bytes)
+
+    # multi-query drain: one fused stacked kernel per epoch
+    rt2 = AmbitRuntime(backend="pallas")
+    qbits = rng.integers(0, 2, (n_queries, 2, rows, n_bits)).astype(bool)
+    envs = [{"x": rt2.put(BitVector.from_bits(qb[0])),
+             "y": rt2.put(BitVector.from_bits(qb[1]))} for qb in qbits]
+    kops.fused_dispatch_reset()
+    tickets = [rt2.submit(x & y, env) for env in envs]
+    rt2.drain()
+    epochs = len(rt2.last_drain.epochs)
+    dispatches = kops.fused_dispatch_count()
+    assert epochs == 1 and dispatches == 1, (epochs, dispatches)
+    for t, qb in zip(tickets, qbits):
+        assert np.array_equal(np.asarray(rt2.get(t.result).bits()),
+                              qb[0] & qb[1])
+    return [("kern_pallas_resident_chain", us_res,
+             f"ops={n_ops} rows={rows} "
+             f"traffic={host_bytes / res_bytes:.1f}x "
+             f"res_bytes={res_bytes} host_bytes={host_bytes} "
+             f"queries={n_queries} epochs={epochs} "
+             f"fused_dispatches={dispatches} host_wall={us_host:.0f}us")]
+
+
 def kernels_micro() -> List[Row]:
     from repro.core import expr as E
     from repro.kernels import ops, ref
@@ -272,6 +343,7 @@ def kernels_micro() -> List[Row]:
     rows: List[Row] = []
     rows.extend(ambit_batched_speedup())
     rows.extend(pim_resident_chain())
+    rows.extend(pallas_resident_chain())
     rows.extend(pim_sharded_scan())
     rows.extend(pim_async_multiquery())
     rng = np.random.default_rng(0)

@@ -11,15 +11,25 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig24_*   bitvector set operations    (Section 8.3)
   kern_*    Pallas kernel micro + engine roofline model
   roofline_* / cell_*  dry-run roofline aggregation (SSRoofline)
+
+Machine-readable output: ``--json out.json`` additionally writes every
+row as ``{"section", "name", "us", "derived"}`` records (schema 1).
+Wall-clock lives only in ``us`` and non-integer derived tokens, so the
+structural fields (names, op counts, ledger bytes/ns) diff cleanly
+across machines - see benchmarks/compare.py and the committed
+BENCH_kernels.json baseline. ``--sections kernels_micro`` (comma list,
+substring match on section function names) restricts the run.
 """
 
+import argparse
+import json
 import sys
 
 
-def main() -> None:
+def sections():
     from . import kernels_micro, paper_apps, paper_tables, roofline
 
-    sections = [
+    return [
         paper_tables.fig20_programs,
         paper_tables.fig20_batched,
         paper_tables.table3_variation,
@@ -31,16 +41,42 @@ def main() -> None:
         kernels_micro.kernels_micro,
         roofline.roofline_rows,
     ]
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="benchmark harness (see module docstring)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON records")
+    ap.add_argument("--sections", default=None,
+                    help="comma-separated substring filter on section "
+                         "function names (e.g. 'kernels_micro')")
+    args = ap.parse_args(argv)
+
+    wanted = None
+    if args.sections:
+        wanted = [s.strip() for s in args.sections.split(",") if s.strip()]
+
     print("name,us_per_call,derived")
-    failures = 0
-    for fn in sections:
+    rows, failures = [], 0
+    for fn in sections():
+        if wanted is not None and \
+                not any(w in fn.__name__ for w in wanted):
+            continue
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.2f},{derived}")
+                rows.append({"section": fn.__name__, "name": name,
+                             "us": round(us, 2), "derived": derived})
         except Exception as e:  # keep the harness robust
             failures += 1
             print(f"{fn.__name__},0.0,ERROR {type(e).__name__}: {e}")
             sys.stderr.write(f"benchmark {fn.__name__} failed: {e}\n")
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump({"schema": 1, "rows": rows}, fh, indent=1,
+                      sort_keys=True)
+            fh.write("\n")
     if failures:
         raise SystemExit(f"{failures} benchmark section(s) failed")
 

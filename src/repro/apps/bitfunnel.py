@@ -8,7 +8,9 @@ AND over thousands of documents per word is exactly Ambit's sweet spot.
 
 With an ``AmbitRuntime``, the filter rows are uploaded once (``freeze``)
 and every query lowers as a single AND tree over the resident rows - the
-term count no longer multiplies host traffic. A multi-device runtime
+term count no longer multiplies host traffic. Any runtime backend works
+unmodified: ``ambit_sim`` keeps rows in simulated DRAM, ``jnp``/``pallas``
+keep them on the accelerator (one fused dispatch per query). A multi-device runtime
 shards the rows across the cluster (the ``near=`` chain keeps them
 chunk-aligned, so query ANDs stay on-device); cold rows LRU-spill on a
 full device and fault back in at query time, and ``freeze(pin=True)``

@@ -14,6 +14,11 @@ Two execution paths:
   * resident - pass an ``AmbitRuntime``: bitmaps are uploaded once at
     ``add`` time, whole queries lower as one expression tree through the
     placement-aware planner, and only the final popcount reads data back.
+    The runtime's backend is transparent to this class: the DRAM model
+    (``ambit_sim``, default) measures paper-units ns/nJ, while
+    ``AmbitRuntime(backend="jnp"/"pallas")`` keeps the bitmaps resident
+    on the accelerator (DeviceStore) with identical put/eval/get code -
+    weekly queries then drain as fused stacked kernel launches.
     A multi-device runtime (``AmbitRuntime(devices=N)``) shards each
     bitmap across the cluster; the ``near=`` chain keeps corresponding
     chunks of co-queried bitmaps on the same device, so queries pay no
@@ -87,7 +92,9 @@ class BitmapIndex:
             acc = self.engine.and_(acc, self.bitmaps[nm])
             if self.engine.last_stats:
                 total += self.engine.last_stats
-        return int(self.engine.popcount(acc)), total
+        count = int(self.engine.popcount(acc))
+        total += self.engine.last_stats      # fresh per-entry-point ledger
+        return count, total
 
     def weekly_active_query(self, weeks: List[str], gender: str
                             ) -> Tuple[int, List[int], OpStats]:
@@ -128,6 +135,7 @@ class BitmapIndex:
             if self.engine.last_stats:
                 total += self.engine.last_stats
             per_week.append(int(self.engine.popcount(inter)))
+            total += self.engine.last_stats  # the popcount's own ledger
         return unique_all, per_week, total
 
 

@@ -102,7 +102,10 @@ def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
     ``pin_planes=True`` exempts them from eviction. Sharded runtimes
     (``AmbitRuntime(devices=N)``) split every plane across devices; the
     ``near=`` chain keeps corresponding chunks co-resident, so the whole
-    predicate still runs without inter-device transfers."""
+    predicate still runs without inter-device transfers. Accelerator
+    runtimes (``backend="jnp"/"pallas"``) hold the planes as device
+    arrays and run the whole predicate as one fused kernel - same code,
+    same ledger contract (only spill/fault-in bytes are charged)."""
     from ..core.engine import OpStats
 
     total = OpStats()

@@ -108,6 +108,62 @@ def compile_cache_clear() -> None:
     _compile_cached.cache_clear()
 
 
+@functools.lru_cache(maxsize=256)
+def _device_compiled(expression: E.Expr, names: tuple, backend: str,
+                     n_bits: int, donate_idx: Optional[int]):
+    """Jitted-callable LRU for the accelerator-resident path - the
+    jnp/pallas twin of ``_compile_cached``. One callable per
+    ``(expression, names, backend, n_bits, donation slot)``; operand
+    shapes specialize inside ``jax.jit`` exactly as ``data_rows`` does in
+    the AAP cache. ``donate_idx`` donates that operand's buffer to XLA
+    (``out=``-style in-place rebinds: the result reuses the rebound
+    handle's storage instead of allocating). Donation is requested only
+    off-CPU - the CPU runtime cannot honor it and would warn."""
+    def compute(*arrays):
+        env = dict(zip(names, arrays))
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            out = kops._eval_padded(expression, names, env)
+        else:
+            out = E.eval_expr(expression, env)
+        from .bitvector import _mask_tail
+        return _mask_tail(out, n_bits)
+
+    donate = () if donate_idx is None or jax.default_backend() == "cpu" \
+        else (donate_idx,)
+    return jax.jit(compute, donate_argnums=donate)
+
+
+@functools.lru_cache(maxsize=256)
+def _device_compiled_stacked(expression: E.Expr, names: tuple, backend: str,
+                             n_bits: int):
+    """Epoch-stacked variant of ``_device_compiled``: operands are
+    ``(queries, rows, words)`` stacks and the whole epoch evaluates in
+    ONE dispatch (one stacked-grid pallas_call on the pallas backend)."""
+    def compute(*arrays):
+        env = dict(zip(names, arrays))
+        if backend == "pallas":
+            from ..kernels import ops as kops
+            out = kops._eval_padded_stacked(expression, names, env)
+        else:
+            out = E.eval_expr(expression, env)
+        from .bitvector import _mask_tail
+        return _mask_tail(out, n_bits)
+
+    return jax.jit(compute)
+
+
+def device_compile_cache_info():
+    """Cache statistics for the accelerator-resident jit LRUs."""
+    return (_device_compiled.cache_info(),
+            _device_compiled_stacked.cache_info())
+
+
+def device_compile_cache_clear() -> None:
+    _device_compiled.cache_clear()
+    _device_compiled_stacked.cache_clear()
+
+
 def binop_expr(op: str) -> E.Expr:
     """The bbop ISA's two-operand expressions over vars "a"/"b" (single
     source of truth for the engine and the pim runtime)."""
@@ -197,8 +253,16 @@ class BulkBitwiseEngine:
         """Bitcount (Section 9.1 future-op; we provide it natively)."""
         if self.backend == "pallas":
             from ..kernels import ops as kops
-            return kops.popcount(a.data)
-        return a.popcount()
+            out = kops.popcount(a.data)
+        else:
+            out = a.popcount()
+        # Fresh ledger on every public entry point: callers accumulate
+        # ``last_stats`` after each call, and a stale ledger here would
+        # silently re-merge the previous op's DRAM cost.
+        self.last_stats = OpStats(
+            bytes_touched=a.nbytes
+            + (out.nbytes if hasattr(out, "nbytes") else 0))
+        return out
 
     def shift(self, a: BitVector, amount: int) -> BitVector:
         """Logical bit shift by `amount` positions (Section 9.1 future-op:
@@ -210,6 +274,8 @@ class BulkBitwiseEngine:
         i-amount of the input)."""
         from .bitvector import _mask_tail
         n = a.n_bits
+        # Fresh ledger per entry point (host-side op: two buffers cross).
+        self.last_stats = OpStats(bytes_touched=2 * a.nbytes)
         if amount == 0:
             return BitVector(a.data, n)
         data = a.data

@@ -61,3 +61,32 @@ def fused_bitwise(expression: E.Expr, names: Tuple[str, ...],
         out_shape=jax.ShapeDtypeStruct((rows, words), jnp.uint32),
         interpret=interpret,
     )(*arrays)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("expression", "names", "block_rows",
+                                    "block_words", "interpret"))
+def fused_bitwise_stacked(expression: E.Expr, names: Tuple[str, ...],
+                          *arrays: jnp.ndarray,
+                          block_rows: int = DEFAULT_BLOCK_ROWS,
+                          block_words: int = DEFAULT_BLOCK_WORDS,
+                          interpret: bool = True) -> jnp.ndarray:
+    """Multi-query fusion: evaluate `expression` over ``(queries, rows,
+    words)`` uint32 stacks in ONE kernel launch. The leading grid axis
+    walks the query dimension, so an epoch of shape-compatible queries
+    costs one dispatch instead of one per query - the multi-session
+    analogue of the AAP-chain fusion above (banks run concurrent bbops;
+    here query tiles share one launch's grid)."""
+    queries, rows, words = arrays[0].shape
+    br = min(block_rows, rows)
+    bw = min(block_words, words)
+    grid = (queries, pl.cdiv(rows, br), pl.cdiv(words, bw))
+    spec = pl.BlockSpec((1, br, bw), lambda q, i, j: (q, i, j))
+    return pl.pallas_call(
+        _expr_kernel(expression, names),
+        grid=grid,
+        in_specs=[spec] * len(arrays),
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((queries, rows, words), jnp.uint32),
+        interpret=interpret,
+    )(*arrays)

@@ -26,6 +26,28 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+# -- fused-dispatch probe ------------------------------------------------------
+# Counts calls to the fused bitwise entry points at the (un-jitted) wrapper
+# layer - one increment per kernel launch issued by Python. Tests and
+# benchmarks assert "one fused dispatch per epoch" against this counter.
+
+_FUSED_DISPATCHES = 0
+
+
+def _count_dispatch() -> None:
+    global _FUSED_DISPATCHES
+    _FUSED_DISPATCHES += 1
+
+
+def fused_dispatch_count() -> int:
+    return _FUSED_DISPATCHES
+
+
+def fused_dispatch_reset() -> None:
+    global _FUSED_DISPATCHES
+    _FUSED_DISPATCHES = 0
+
+
 def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
     pads = []
     for dim, mult in zip(x.shape, mults):
@@ -36,10 +58,10 @@ def _pad_to(x: jnp.ndarray, mults) -> jnp.ndarray:
     return x
 
 
-def bitwise_eval(expression: E.Expr,
+def _eval_padded(expression: E.Expr, names,
                  env: Dict[str, jnp.ndarray]) -> jnp.ndarray:
-    """Fused bitwise expression over packed uint32 arrays of equal shape."""
-    names = tuple(sorted(env.keys()))
+    """Shape-normalized fused evaluation (shared by the public wrapper and
+    the accelerator-resident compiled callables; jit-safe, no counters)."""
     arrays = [jnp.asarray(env[n], jnp.uint32) for n in names]
     shape = arrays[0].shape
     lead = shape[:-1]
@@ -47,9 +69,47 @@ def bitwise_eval(expression: E.Expr,
     rows = int(np.prod(lead)) if lead else 1
     arrays = [a.reshape(rows, words) for a in arrays]
     padded = [_pad_to(a, (8, 128)) for a in arrays]
-    out = _bitwise.fused_bitwise(expression, names, *padded,
+    out = _bitwise.fused_bitwise(expression, tuple(names), *padded,
                                  interpret=_interpret())
     return out[:rows, :words].reshape(shape)
+
+
+def _eval_padded_stacked(expression: E.Expr, names,
+                         env: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """(queries, rows, words) stacks -> one stacked-grid kernel launch."""
+    arrays = [jnp.asarray(env[n], jnp.uint32) for n in names]
+    q, rows, words = arrays[0].shape
+    padded = [_pad_to(a, (1, 8, 128)) for a in arrays]
+    out = _bitwise.fused_bitwise_stacked(expression, tuple(names), *padded,
+                                         interpret=_interpret())
+    return out[:, :rows, :words]
+
+
+def bitwise_eval(expression: E.Expr,
+                 env: Dict[str, jnp.ndarray]) -> jnp.ndarray:
+    """Fused bitwise expression over packed uint32 arrays of equal shape."""
+    names = tuple(sorted(env.keys()))
+    _count_dispatch()
+    return _eval_padded(expression, names, env)
+
+
+def bitwise_eval_stacked(expression: E.Expr, names,
+                         envs) -> list:
+    """Evaluate one expression over a batch of shape-compatible operand
+    environments in a single stacked kernel launch. ``envs`` is a list of
+    name->(..., words) arrays, all equal-shaped; returns one result array
+    per environment."""
+    names = tuple(names)
+    first = jnp.asarray(envs[0][names[0]], jnp.uint32)
+    shape = first.shape
+    lead, words = shape[:-1], shape[-1]
+    rows = int(np.prod(lead)) if lead else 1
+    stacked = {
+        nm: jnp.stack([jnp.asarray(env[nm], jnp.uint32).reshape(rows, words)
+                       for env in envs]) for nm in names}
+    _count_dispatch()
+    out = _eval_padded_stacked(expression, names, stacked)
+    return [out[k].reshape(shape) for k in range(len(envs))]
 
 
 def popcount(x: jnp.ndarray) -> jnp.ndarray:

@@ -10,14 +10,20 @@ query planning over the Ambit device model.
                                  colocation, per-device sub-plans
   AsyncScheduler / Ticket      - submit/drain queue packing bank/device-
                                  disjoint queries into concurrent epochs
+  DeviceStore / DeviceBitVector- the accelerator twin of PimStore: jax
+                                 device arrays resident across calls,
+                                 fused (stacked) dispatch per epoch
   AmbitRuntime                 - the session API applications use
-                                 (devices=N shards across a cluster)
+                                 (devices=N shards across a cluster;
+                                 backend="jnp"/"pallas" runs resident on
+                                 the accelerator)
 """
 
 from .allocator import COLOCATED, POLICIES, RowAllocator, STRIPED, Slot
 from .cluster import (AFFINITY, ChannelLedger, ChannelModel, CLUSTER_POLICIES,
                       ClusterBitVector, ClusterPlanner, ClusterReport,
                       PACKED, PimCluster, ROUND_ROBIN)
+from .device_store import DeviceBitVector, DevicePlanner, DeviceStore
 from .planner import PlanReport, QueryPlanner
 from .runtime import AmbitRuntime
 from .scheduler import (AsyncScheduler, DrainReport, EpochReport, Ticket)
@@ -26,7 +32,8 @@ from .store import PimStore, ResidentBitVector
 __all__ = [
     "AFFINITY", "AmbitRuntime", "AsyncScheduler", "COLOCATED",
     "ChannelLedger", "ChannelModel", "CLUSTER_POLICIES", "ClusterBitVector",
-    "ClusterPlanner", "ClusterReport", "DrainReport", "EpochReport",
+    "ClusterPlanner", "ClusterReport", "DeviceBitVector", "DevicePlanner",
+    "DeviceStore", "DrainReport", "EpochReport",
     "PACKED", "PimCluster", "PimStore", "PlanReport", "POLICIES",
     "QueryPlanner", "ResidentBitVector", "ROUND_ROBIN", "RowAllocator",
     "STRIPED", "Slot", "Ticket",

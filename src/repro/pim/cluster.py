@@ -145,31 +145,52 @@ class ClusterBitVector:
     ``slots[i]`` is the ``(device, (bank, subarray, row))`` home of chunk
     ``i``; the chunk order is identical to ``ResidentBitVector.slots``
     (logical-row-major, chunk-minor), so ``near=other.slots`` aligns
-    corresponding chunks across co-operating vectors."""
+    corresponding chunks across co-operating vectors.
+
+    A slot of ``None`` marks a chunk that was *partially spilled* - a
+    full device evicted only ITS chunks of this vector; the rest stayed
+    hot. Spilled chunks of a dirty handle live in ``_stash`` (their
+    device rows were read back through the ledger); clean ones are
+    recoverable from the current host copy for free. ``ensure_resident``
+    faults only the missing chunks back in."""
 
     cluster: "PimCluster"
     n_bits: int
     shape: Tuple[int, ...]
     words32: int
     chunks: int                  # device rows per logical row
-    slots: List[DeviceSlot]
+    slots: List[Optional[DeviceSlot]]
     dirty: bool = False
     pinned: bool = False
     spilled: bool = False
     name: Optional[str] = None
     _host: Optional[BitVector] = None
+    # chunk index -> (words,) uint64 row for dirty partially-spilled chunks
+    _stash: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
 
     @property
     def n_slots(self) -> int:
         return len(self.slots)
 
     @property
+    def live_chunks(self) -> List[int]:
+        return [i for i, ds in enumerate(self.slots) if ds is not None]
+
+    @property
+    def partially_spilled(self) -> bool:
+        return any(ds is None for ds in self.slots)
+
+    @property
     def device_bytes(self) -> int:
         return self.n_slots * self.cluster.row_bytes
 
     @property
+    def resident_bytes(self) -> int:
+        return len(self.live_chunks) * self.cluster.row_bytes
+
+    @property
     def devices(self) -> List[int]:
-        return sorted({d for d, _ in self.slots})
+        return sorted({ds[0] for ds in self.slots if ds is not None})
 
     @property
     def freed(self) -> bool:
@@ -289,38 +310,86 @@ class PimCluster(LruSpillBase):
                 key=lambda i: (self.allocators[i].utilization, i))
         return [d] * n_chunks
 
-    # -- LRU / eviction (machinery in LruSpillBase; cluster eviction
-    # spills the WHOLE vector - every device's chunks - so spilled
-    # handles are never half-resident) --------------------------------------
+    # -- LRU / eviction (machinery in LruSpillBase) ---------------------------
+    # A full device evicts PARTIALLY: only the victim's chunks resident on
+    # that device spill (the rest of the vector stays hot on its other
+    # devices). Explicit ``spill`` still evicts the whole vector.
 
     def _owner_of(self, cbv: ClusterBitVector):
         return cbv.cluster
 
+    def _check_fully_live(self, cbv) -> None:
+        """Planner-side ops need every chunk on a device; ``spill`` and
+        ``get`` remain legal on partially spilled handles."""
+        self._check_live(cbv)
+        if cbv.partially_spilled:
+            raise AmbitError(
+                f"device-side use of partially spilled {cbv!r} "
+                "(ensure_resident faults the missing chunks back in)")
+
     def _release_rows(self, cbv: ClusterBitVector) -> None:
         by_dev: Dict[int, List[Slot]] = {}
-        for d, s in cbv.slots:
-            by_dev.setdefault(d, []).append(s)
+        for ds in cbv.slots:
+            if ds is not None:
+                by_dev.setdefault(ds[0], []).append(ds[1])
         for d in sorted(by_dev):
             self.allocators[d].free(by_dev[d])
         cbv.slots = []
+        cbv._stash.clear()
 
     def _evict_one(self, d: int,
                    protect: Iterable[ClusterBitVector]) -> bool:
-        """Spill the LRU unpinned handle owning rows on device ``d``.
-        Unheld victims first; a held (queued) operand spills only under
-        capacity pressure and faults back in when its query executes."""
-        protected = {id(p) for p in protect}
-        for force_held in (False, True):
-            for cbv in list(self._lru.values()):
-                if cbv.pinned or id(cbv) in protected or not cbv.slots:
-                    continue
-                if self.is_held(cbv) and not force_held:
-                    continue
-                if all(dd != d for dd, _ in cbv.slots):
-                    continue
-                self.spill(cbv, _force_held=force_held)
-                return True
-        return False
+        """Partial spill of the LRU unpinned handle owning rows on full
+        device ``d``: only its device-``d`` chunks evict. Unheld victims
+        first; a held (queued) operand spills only under capacity
+        pressure and faults back in when its query executes."""
+        return self._evict_lru(
+            protect,
+            want=lambda cbv: any(ds is not None and ds[0] == d
+                                 for ds in cbv.slots),
+            spill=lambda cbv, fh: self.spill_device(cbv, d,
+                                                    _force_held=fh))
+
+    def spill_device(self, cbv: ClusterBitVector, d: int,
+                     _force_held: bool = False) -> None:
+        """Evict only the chunks of ``cbv`` resident on device ``d``.
+        Clean chunks cost zero ledger bytes (the host copy is current);
+        dirty ones are read back - just those rows - through the ledger
+        into the chunk stash. When every live chunk is on ``d`` this
+        degenerates to a whole-vector ``spill``."""
+        self._check_handle(cbv)
+        if cbv.spilled:
+            return                      # nothing resident anywhere
+        if cbv.pinned:
+            raise AmbitError(f"cannot spill pinned {cbv!r}")
+        if self.is_held(cbv) and not _force_held:
+            raise AmbitError(
+                f"cannot spill {cbv!r}: a queued query still reads it")
+        live = cbv.live_chunks
+        idxs = [i for i in live if cbv.slots[i][0] == d]
+        if not idxs:
+            return                      # no rows on this device
+        if len(idxs) == len(live):      # whole remainder lives on d
+            self.spill(cbv, _force_held=_force_held)
+            return
+        if cbv.dirty or cbv._host is None:
+            rows = self.devices[d].read([cbv.slots[i][1] for i in idxs])
+            rows = rows.reshape(len(idxs), self.words)
+            for k, i in enumerate(idxs):
+                cbv._stash[i] = rows[k].copy()
+            nbytes = len(idxs) * self.row_bytes
+            self.host_reads += 1
+            self.bytes_from_device += nbytes
+            self.ledger.host_reads += 1
+            self.ledger.device_to_host_bytes += nbytes
+            self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+            self.evicted_dirty += 1
+        else:
+            self.evicted_clean += 1     # host copy current: free
+        self.allocators[d].free([cbv.slots[i][1] for i in idxs])
+        for i in idxs:
+            cbv.slots[i] = None
+        # still owns rows elsewhere: stays registered in the LRU
 
     def _alloc_on(self, d: int, n_rows: int,
                   near: Optional[Sequence[Slot]] = None,
@@ -384,8 +453,11 @@ class PimCluster(LruSpillBase):
     def _read_back(self, cbv: ClusterBitVector) -> BitVector:
         rows = np.empty((cbv.n_slots, self.words), np.uint64)
         by_dev: Dict[int, List[int]] = {}
-        for i, (d, _) in enumerate(cbv.slots):
-            by_dev.setdefault(d, []).append(i)
+        for i, ds in enumerate(cbv.slots):
+            if ds is None:              # partially spilled chunk: stashed
+                rows[i] = cbv._stash[i]
+                continue
+            by_dev.setdefault(ds[0], []).append(i)
         for d in sorted(by_dev):
             idxs = by_dev[d]
             rows[idxs] = self.devices[d].read(
@@ -394,7 +466,9 @@ class PimCluster(LruSpillBase):
                            self.words)
         cbv._host = out
         cbv.dirty = False
-        nbytes = cbv.device_bytes
+        cbv._stash.clear()              # host copy now covers every chunk
+        # only rows that actually crossed the channel are charged
+        nbytes = cbv.resident_bytes
         self.host_reads += 1
         self.bytes_from_device += nbytes
         self.ledger.host_reads += 1
@@ -406,9 +480,12 @@ class PimCluster(LruSpillBase):
                         protect: Iterable[ClusterBitVector] = ()
                         ) -> ClusterBitVector:
         """Fault a spilled handle back in (fresh upload, default
-        placement). Live handles just refresh recency."""
+        placement). Partially spilled handles re-upload ONLY the missing
+        chunks - the rest never left. Live handles refresh recency."""
         self._check_handle(cbv)
         if not cbv.spilled:
+            if cbv.partially_spilled:
+                return self._fault_in_partial(cbv, protect)
             self._touch(cbv)
             return cbv
         chunks = chunk_rows(cbv._host, self.words)
@@ -440,6 +517,48 @@ class PimCluster(LruSpillBase):
         self._register(cbv)
         return cbv
 
+    def _fault_in_partial(self, cbv: ClusterBitVector,
+                          protect: Iterable[ClusterBitVector]
+                          ) -> ClusterBitVector:
+        """Re-upload only the missing (None-slot) chunks: dirty chunks
+        come from the stash (their only current copy), clean ones from
+        the host copy. Placement follows the vector's default chunk->
+        device mapping; only the uploaded bytes are charged."""
+        missing = [i for i, ds in enumerate(cbv.slots) if ds is None]
+        host_chunks = None
+        rows = np.empty((len(missing), self.words), np.uint64)
+        for k, i in enumerate(missing):
+            if i in cbv._stash:
+                rows[k] = cbv._stash[i]
+            else:
+                if host_chunks is None:
+                    host_chunks = chunk_rows(cbv._host, self.words)
+                rows[k] = host_chunks[i]
+        devmap = self._place(cbv.n_slots, None, None)
+        try:
+            for d in sorted({devmap[i] for i in missing}):
+                ks = [k for k, i in enumerate(missing) if devmap[i] == d]
+                got = self._alloc_on(d, len(ks), protect=(cbv, *protect))
+                self.devices[d].write(got, rows[ks])
+                for k, s in zip(ks, got):
+                    cbv.slots[missing[k]] = (d, s)
+        except AmbitError:
+            for i in missing:           # roll back to a consistent state
+                if cbv.slots[i] is not None:
+                    self.allocators[cbv.slots[i][0]].free([cbv.slots[i][1]])
+                    cbv.slots[i] = None
+            raise
+        for i in missing:
+            cbv._stash.pop(i, None)     # device copy is current again
+        nbytes = len(missing) * self.row_bytes
+        self.host_writes += 1
+        self.bytes_to_device += nbytes
+        self.ledger.host_writes += 1
+        self.ledger.host_to_device_bytes += nbytes
+        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        self._touch(cbv)
+        return cbv
+
     # -- cross-device migration ----------------------------------------------
 
     def colocate(self, operands: Sequence[ClusterBitVector]) -> int:
@@ -452,7 +571,7 @@ class PimCluster(LruSpillBase):
             return 0
         n = operands[0].n_slots
         for cbv in operands:
-            self._check_live(cbv)
+            self._check_fully_live(cbv)
             if cbv.n_slots != n:
                 raise AmbitError("operands must be chunk-aligned "
                                  "(same n_bits and shape)")
@@ -552,11 +671,11 @@ class ClusterPlanner:
         out = set()
         for nm in sorted(env):
             cbv = env[nm]
-            if cbv.spilled:
+            if cbv.spilled or cbv.partially_spilled:
                 return frozenset(
                     (d, b) for d in range(cl.n_devices)
                     for b in range(len(cl.devices[d].banks)))
-            out.update((d, s[0]) for d, s in cbv.slots)
+            out.update((ds[0], ds[1][0]) for ds in cbv.slots)
         return frozenset(out)
 
     def execute(self, expression: E.Expr,
@@ -569,7 +688,7 @@ class ClusterPlanner:
         operands = [env[nm] for nm in names]
         first = operands[0]
         for cbv in operands:
-            cl._check_live(cbv)
+            cl._check_fully_live(cbv)
             if (cbv.n_bits, cbv.shape, cbv.n_slots) != (
                     first.n_bits, first.shape, first.n_slots):
                 raise ValueError(

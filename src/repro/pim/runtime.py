@@ -41,12 +41,25 @@ from ..core.timing import DEFAULT_TIMING, TimingParams
 from .allocator import STRIPED
 from .cluster import (ChannelModel, ClusterBitVector, PimCluster,
                       ROUND_ROBIN)
+from .device_store import DeviceBitVector, DevicePlanner, DeviceStore
 from .planner import QueryPlanner
 from .scheduler import AsyncScheduler, DrainReport, Ticket
 from .store import PimStore, ResidentBitVector
 
 
 class AmbitRuntime:
+    """Session API over one of three resident backends:
+
+      * ``backend="ambit_sim"`` (default) - the DRAM device model:
+        single device or a sharded ``PimCluster`` (``devices=N``).
+      * ``backend="jnp"`` / ``"pallas"`` - the accelerator-resident
+        ``DeviceStore``: operands live as jax device arrays, whole
+        expressions run as one fused dispatch, and ``submit``/``drain``
+        packs shape-compatible queries into ONE stacked kernel launch
+        per epoch. ``capacity_bytes`` bounds device memory (LRU spill
+        to host, exactly like the DRAM path's row budget).
+    """
+
     def __init__(self, geometry: DRAMGeometry = DEFAULT_GEOMETRY,
                  timing: TimingParams = DEFAULT_TIMING,
                  banks: Optional[int] = None,
@@ -56,8 +69,24 @@ class AmbitRuntime:
                  colocate: bool = True, scratch_rows: int = 4,
                  devices: int = 1, placement: str = ROUND_ROBIN,
                  channel: Optional[ChannelModel] = None,
-                 seed: int = 0):
-        if devices > 1:
+                 seed: int = 0, backend: str = "ambit_sim",
+                 capacity_bytes: Optional[int] = None):
+        if backend not in ("ambit_sim", "jnp", "pallas"):
+            raise ValueError(backend)
+        self.backend = backend
+        if backend != "ambit_sim":
+            if devices > 1:
+                raise ValueError(
+                    "devices>1 shards the DRAM model; the accelerator "
+                    "store is one device (jax handles its own sharding)")
+            self.cluster = None
+            self.device = None
+            self.allocator = None
+            self.store = DeviceStore(backend=backend,
+                                     capacity_bytes=capacity_bytes)
+            self.planner = DevicePlanner(self.store)
+            self._handle_type = DeviceBitVector
+        elif devices > 1:
             self.cluster = PimCluster(
                 devices, geometry, timing, banks=banks,
                 subarrays=subarrays, words=words, placement=placement,
@@ -98,10 +127,13 @@ class AmbitRuntime:
         return rbv
 
     def get(self, rbv) -> BitVector:
-        was_dirty = rbv.dirty and not rbv.spilled
+        before = self.store.bytes_from_device
         out = self.store.get(rbv)
+        # Only what actually crossed the channel (zero for clean/spilled
+        # handles; a partially spilled dirty handle reads just its
+        # still-resident chunks).
         self._account(OpStats(
-            bytes_touched=rbv.device_bytes if was_dirty else 0))
+            bytes_touched=self.store.bytes_from_device - before))
         return out
 
     def free(self, rbv) -> None:
@@ -110,21 +142,31 @@ class AmbitRuntime:
     # -- evaluation ----------------------------------------------------------
 
     def eval(self, expression: E.Expr, env: Dict[str, object],
-             out_name: Optional[str] = None):
+             out_name: Optional[str] = None, out=None):
         """Evaluate a whole expression tree over resident operands. The
         result is a new resident bitvector; nothing crosses the channel
-        except fault-ins of previously spilled operands."""
+        except fault-ins of previously spilled operands. ``out=`` rebinds
+        the result into an existing handle in place (on the accelerator
+        backends the destination's buffer is donated to XLA, so chained
+        queries update storage without allocation churn)."""
         for nm, v in env.items():
             if not isinstance(v, self._handle_type):
                 raise TypeError(
                     f"operand {nm!r} is not resident - call put() first "
                     "(the host path is BulkBitwiseEngine.eval)")
+        if out is not None and not isinstance(out, self._handle_type):
+            raise TypeError("out= must be an existing resident handle")
         operands = list(env.values())
         up_before = self.store.bytes_to_device
         rd_before = self.store.bytes_from_device
         for v in operands:
             self.store.ensure_resident(v, protect=operands)
-        out = self.planner.execute(expression, env, out_name=out_name)
+        kwargs = {}
+        if out is not None and isinstance(self.planner, DevicePlanner) \
+                and any(v is out for v in operands):
+            kwargs["donate_to"] = out
+        res = self.planner.execute(expression, env, out_name=out_name,
+                                   **kwargs)
         st = OpStats()
         st += self.planner.last_report.stats
         # Fault-ins (and any spill read-backs they forced) are host
@@ -132,7 +174,7 @@ class AmbitRuntime:
         st.bytes_touched += (self.store.bytes_to_device - up_before) + \
             (self.store.bytes_from_device - rd_before)
         self._account(st)
-        return out
+        return self.store.rebind(out, res) if out is not None else res
 
     # -- async multi-query sessions -------------------------------------------
 

@@ -227,17 +227,23 @@ class AsyncScheduler:
     def _form_epochs(self, tickets: List[Ticket]) -> List[EpochReport]:
         """Greedy first-fit in submit order (the deterministic tiebreak):
         each ticket lands in the earliest epoch that (a) is after every
-        epoch its dependencies and handle conflicts require, and (b) has
-        no (device, bank) resource overlap with tickets already in it."""
+        epoch its dependencies and handle conflicts require, (b) has no
+        (device, bank) resource overlap with tickets already in it, and
+        (c) - when the planner defines a ``stack_key`` (accelerator
+        backends dispatch each epoch as ONE stacked kernel) - matches the
+        epoch's key, so every epoch is shape-compatible to stack."""
         cache: Dict[int, frozenset] = {}
         epochs: List[EpochReport] = []
         epoch_resources: List[set] = []
+        epoch_keys: List[object] = []
+        keyer = getattr(self.planner, "stack_key", None)
         this_drain = {id(t): t for t in tickets}
         assigned: Dict[int, int] = {}       # id(ticket) -> epoch
         last_writer: Dict[int, int] = {}    # id(handle) -> epoch
         last_reader: Dict[int, int] = {}
         for t in tickets:
             fp = self._footprint(t, cache)
+            key = keyer(t.expression, t.env) if keyer else None
             floor = 0
             for nm in sorted(t.env):
                 v = t.env[nm]
@@ -256,11 +262,13 @@ class AsyncScheduler:
                 floor = max(floor, last_writer.get(id(t.out), -1) + 1,
                             last_reader.get(id(t.out), -1) + 1)
             e = floor
-            while e < len(epochs) and (epoch_resources[e] & fp):
+            while e < len(epochs) and ((epoch_resources[e] & fp)
+                                       or epoch_keys[e] != key):
                 e += 1
             if e == len(epochs):
                 epochs.append(EpochReport())
                 epoch_resources.append(set())
+                epoch_keys.append(key)
             epochs[e].tickets.append(t.index)
             epoch_resources[e] |= fp
             assigned[id(t)] = e
@@ -297,13 +305,22 @@ class AsyncScheduler:
         current: Optional[Ticket] = None
         try:
             epochs = self._form_epochs(tickets)
-            for t in tickets:
-                current = t
-                self._execute(t)
-                # keep results alive for queued consumers, one hold each
-                n = consumers.get(id(t), 0)
-                for _ in range(n):
-                    self.store.hold(t.result)
+            if hasattr(self.planner, "execute_epoch"):
+                # Accelerator backends: each epoch is ONE fused stacked
+                # dispatch. Epoch order respects every hazard (deps,
+                # out= conflicts), so results match serial execution.
+                by_idx = {t.index: t for t in tickets}
+                for erep in epochs:
+                    group = [by_idx[ti] for ti in erep.tickets]
+                    current = group[0]
+                    self._execute_epoch(group, consumers)
+            else:
+                for t in tickets:
+                    current = t
+                    self._execute(t)
+                    # keep results alive for queued consumers
+                    for _ in range(consumers.get(id(t), 0)):
+                        self.store.hold(t.result)
         except Exception:
             # release every hold the dropped tickets still own (a failed
             # epoch formation drops them all) so no handle leaks a hold
@@ -360,22 +377,35 @@ class AsyncScheduler:
             (k if isinstance(k, tuple) else (0, k)): bank_stats.ns
             for k, bank_stats in rep.per_bank.items()}
         t.channel_ns = getattr(rep, "transfer_ns", 0.0)
-        t.result = self._rebind(t.out, res) if t.out is not None else res
+        t.result = self.store.rebind(t.out, res) if t.out is not None \
+            else res
         self._release_ticket_holds(t)
         t.state = DONE
 
-    def _rebind(self, out, res):
-        """Move the fresh result rows into an existing destination handle
-        (identity-preserving in-place write: no device copy, the old rows
-        are freed)."""
-        if (out.n_bits, out.shape) != (res.n_bits, res.shape):
-            raise AmbitError(
-                f"out= handle shape mismatch: {out!r} vs result {res!r}")
-        self.store._release_rows(out)       # no-op when out is spilled
-        out.slots, res.slots = res.slots, []
-        self.store._unregister(res)
-        out.spilled = False
-        out.dirty = True
-        out._host = None
-        self.store._register(out)
-        return out
+    def _execute_epoch(self, group: List[Ticket],
+                       consumers: Dict[int, int]) -> None:
+        """Dispatch one epoch through the planner's batched entry point
+        (one fused stacked kernel launch). Fault-ins of each ticket's
+        spilled operands are measured per ticket before the dispatch."""
+        store = self.store
+        jobs = []
+        epoch_operands: List[object] = []   # every operand must survive
+        for t in group:                     # until the stacked dispatch
+            env = {nm: (v.result if isinstance(v, Ticket) else v)
+                   for nm, v in t.env.items()}
+            epoch_operands.extend(env.values())
+            up0, rd0 = store.bytes_to_device, store.bytes_from_device
+            for v in env.values():
+                store.ensure_resident(v, protect=epoch_operands)
+            t.stats = OpStats(
+                bytes_touched=(store.bytes_to_device - up0)
+                + (store.bytes_from_device - rd0))
+            jobs.append((t.expression, env, t.out_name, t.out))
+        results = self.planner.execute_epoch(jobs)
+        for t, res in zip(group, results):
+            t.result = self.store.rebind(t.out, res) if t.out is not None \
+                else res
+            self._release_ticket_holds(t)
+            t.state = DONE
+            for _ in range(consumers.get(id(t), 0)):
+                self.store.hold(t.result)

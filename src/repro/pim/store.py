@@ -226,6 +226,55 @@ class LruSpillBase:
         rbv.spilled = False
         rbv._host = None
 
+    def rebind(self, out, res) -> object:
+        """Move a fresh result's storage into an existing destination
+        handle (``out=`` semantics: identity-preserving in-place write -
+        no device copy, the destination's old storage is freed)."""
+        if (out.n_bits, out.shape) != (res.n_bits, res.shape):
+            raise AmbitError(
+                f"out= handle shape mismatch: {out!r} vs result {res!r}")
+        self._release_rows(out)         # no-op when out is spilled
+        self._move_storage(out, res)
+        self._unregister(res)
+        out.spilled = False
+        out.dirty = True
+        out._host = None
+        self._register(out)
+        return out
+
+    def _move_storage(self, out, res) -> None:
+        """Transfer ``res``'s device storage into ``out`` (slot lists by
+        default; DeviceStore moves the device buffer instead)."""
+        out.slots, res.slots = res.slots, []
+
+    def _evict_lru(self, protect: Iterable, want=None, spill=None) -> bool:
+        """Spill the least-recently-used evictable handle. Unheld victims
+        are preferred; under capacity pressure a held (queued) operand of
+        a not-yet-executed query spills as a last resort - it faults back
+        in when its query runs, charged to that query. ``want`` narrows
+        the candidate set (e.g. handles owning rows on one full device)
+        and ``spill`` overrides how the victim is spilled (e.g. partial,
+        per-device). Returns False when nothing evictable matched."""
+        protected = {id(p) for p in protect}
+        if spill is None:
+            spill = lambda rbv, fh: self.spill(rbv, _force_held=fh)  # noqa: E731
+        for force_held in (False, True):
+            for rbv in list(self._lru.values()):
+                if rbv.pinned or id(rbv) in protected or \
+                        not self._resident_storage(rbv):
+                    continue
+                if want is not None and not want(rbv):
+                    continue
+                if self.is_held(rbv) and not force_held:
+                    continue
+                spill(rbv, force_held)
+                return True
+        return False
+
+    def _resident_storage(self, rbv) -> bool:
+        """Does the handle hold any device storage right now?"""
+        return bool(rbv.slots)
+
     def _check_handle(self, rbv) -> None:
         """Valid for get/free/ensure_resident: live OR spilled."""
         if rbv.freed:
@@ -326,21 +375,11 @@ class PimStore(LruSpillBase):
         return rbv
 
     def _evict_one(self, protect: Iterable[ResidentBitVector]) -> bool:
-        """Spill the least-recently-used evictable handle. Unheld victims
-        are preferred; under capacity pressure a held (queued) operand of
-        a not-yet-executed query is spilled as a last resort - it faults
-        back in when its query runs, charged to that query. Returns False
-        when every registered handle is pinned or protected (after giving
-        a cluster-installed fallback the chance to evict at its scope)."""
-        protected = {id(p) for p in protect}
-        for force_held in (False, True):
-            for rbv in list(self._lru.values()):
-                if rbv.pinned or id(rbv) in protected or not rbv.slots:
-                    continue
-                if self.is_held(rbv) and not force_held:
-                    continue
-                self.spill(rbv, _force_held=force_held)
-                return True
+        """Spill the LRU evictable handle (loop in LruSpillBase); when
+        every registered handle is pinned or protected, give a
+        cluster-installed fallback the chance to evict at its scope."""
+        if self._evict_lru(protect):
+            return True
         if self.spill_fallback is not None:
             return self.spill_fallback()
         return False

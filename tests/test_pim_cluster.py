@@ -236,7 +236,8 @@ def test_cluster_put_spills_lru_clean_for_free():
     base = cl.ledger.device_to_host_bytes
     c = cl.put(_bv(12), name="c")            # full: evict a (LRU, clean)
     assert a.spilled and not b.spilled and not c.spilled
-    assert (cl.evicted_clean, cl.evicted_dirty) == (1, 0)
+    # per-device partial spill: one clean eviction event per full device
+    assert (cl.evicted_clean, cl.evicted_dirty) == (2, 0)
     assert cl.ledger.device_to_host_bytes == base   # clean: zero bytes
     assert np.array_equal(np.asarray(cl.get(a).bits()), host_a)
     cl.ensure_resident(a)                    # fault back in
@@ -257,7 +258,9 @@ def test_cluster_dirty_spill_charges_readback():
     base = rt.store.ledger.device_to_host_bytes
     rt.put(_bv(8))                           # evicts out: dirty read-back
     assert out.spilled
-    assert rt.store.evicted_dirty == 1
+    # two per-device dirty eviction events, but each chunk crosses the
+    # channel exactly once: total read-back bytes == the vector's bytes
+    assert rt.store.evicted_dirty == 2
     assert rt.store.ledger.device_to_host_bytes == base + out_bytes
     assert np.array_equal(np.asarray(rt.get(out).bits()),
                           bits[0] ^ bits[1])
@@ -278,11 +281,83 @@ def test_sharded_eval_spills_on_full_device():
     assert sum(al.free_slots for al in rt.store.allocators) == 0
     out = rt.and_(a, b)                  # dst rows force cluster eviction
     assert cold.spilled and not a.spilled and not b.spilled
-    assert rt.store.evicted_clean == 1
+    assert rt.store.evicted_clean == 2   # one partial event per device
     assert np.array_equal(np.asarray(rt.get(out).bits()),
                           bits[0] & bits[1])
     # and the spilled bystander still reads back exactly, then faults in
     assert np.array_equal(np.asarray(rt.get(cold).bits()), bits[2])
+
+
+def test_partial_spill_keeps_other_devices_hot():
+    """A full device evicts only the victim's chunks resident THERE: the
+    chunks on other devices stay hot (non-None slots), the handle is
+    neither freed nor fully spilled, reads stay exact and free (clean
+    victim), and fault-in re-uploads only the missing chunks."""
+    cl = _cluster(2, banks=1, subarrays=1)   # 12 rows per device
+    bv_a = _bv(8)
+    host_a = np.asarray(bv_a.bits())
+    a = cl.put(bv_a, name="a")               # round_robin: 4 chunks/device
+    base_up = cl.ledger.host_to_device_bytes
+    base_down = cl.ledger.device_to_host_bytes
+    cl.put(_bv(20), name="b", placement="packed")  # overflows device 0
+    # b needed 12 rows on device 0; a's 4 chunks there were evicted
+    assert a.partially_spilled and not a.spilled and not a.freed
+    live_devs = {ds[0] for ds in a.slots if ds is not None}
+    assert live_devs == {1}
+    assert [i for i, ds in enumerate(a.slots) if ds is None] == [0, 2, 4, 6]
+    assert cl.ledger.device_to_host_bytes == base_down  # clean: free
+    assert np.array_equal(np.asarray(cl.get(a).bits()), host_a)
+    # fault-in uploads ONLY the 4 missing chunks
+    cl.ensure_resident(a)
+    assert not a.partially_spilled
+    assert cl.ledger.host_to_device_bytes - base_up == \
+        20 * cl.row_bytes + 4 * cl.row_bytes
+    assert np.array_equal(np.asarray(cl.get(a).bits()), host_a)
+
+
+def test_partial_spill_dirty_chunks_stash_and_merge():
+    """Dirty partial spill reads back just the evicted device's chunks
+    (charged), stashes them, and a later ``get`` merges stash + live
+    reads - charging only the still-resident rows - into an exact host
+    copy."""
+    rng = np.random.default_rng(41)
+    rt = AmbitRuntime(GEOM, banks=1, subarrays=1, words=2,
+                      devices=2, scratch_rows=2, seed=2)
+    bits = rng.integers(0, 2, (2, 8 * 128)).astype(bool)
+    a = rt.put(BitVector.from_bits(bits[0]))
+    b = rt.put(BitVector.from_bits(bits[1]), near=a.slots)
+    out = rt.xor(a, b)                       # dirty, 4 chunks per device
+    rt.get(a), rt.get(b)                     # free touches: out is LRU
+    base = rt.store.ledger.device_to_host_bytes
+    rt.store.spill_device(out, 0)            # evict only device 0's share
+    assert out.partially_spilled and not out.spilled
+    assert rt.store.evicted_dirty == 1
+    assert rt.store.ledger.device_to_host_bytes == base + 4 * rt.store.row_bytes
+    got = np.asarray(rt.store.get(out).bits())   # merge stash + device 1
+    assert np.array_equal(got, bits[0] ^ bits[1])
+    assert rt.store.ledger.device_to_host_bytes == \
+        base + 8 * rt.store.row_bytes        # each chunk crossed once
+    # fault the missing chunks back in and evaluate on-device again
+    rt.store.ensure_resident(out)
+    assert not out.partially_spilled
+    final = rt.and_(out, a)
+    assert np.array_equal(np.asarray(rt.get(final).bits()),
+                          (bits[0] ^ bits[1]) & bits[0])
+
+
+def test_partial_spill_handle_rejected_by_planner_until_fault_in():
+    cl = _cluster(2, banks=1, subarrays=1)
+    a = cl.put(_bv(8), name="a")
+    b = cl.put(_bv(8), name="b", near=a.slots)
+    cl.spill_device(a, 0)
+    assert a.partially_spilled
+    with pytest.raises(AmbitError, match="partially spilled"):
+        cl.planner.execute(X & Y, {"x": a, "y": b})
+    cl.ensure_resident(a)
+    out = cl.planner.execute(X & Y, {"x": a, "y": b})
+    assert np.array_equal(
+        np.asarray(cl.get(out).bits()),
+        np.asarray(cl.get(a).bits()) & np.asarray(cl.get(b).bits()))
 
 
 def test_cluster_pinned_never_evicted():
@@ -347,10 +422,10 @@ def check_cluster_lifecycle(ops_seed):
             except AmbitError:
                 continue         # everything pinned/in-use: fine
             live[h] = bits
-        # invariants
-        owned = [ds for h in live for ds in h.slots]
+        # invariants (None slots = partially spilled chunks: own no rows)
+        owned = [ds for h in live for ds in h.slots if ds is not None]
         assert len(owned) == len(set(owned)), "slot owned twice"
-        resident_chunks = sum(len(h.slots) for h in live)
+        resident_chunks = sum(len(h.live_chunks) for h in live)
         assert sum(a.live for a in cl.allocators) == resident_chunks
         for h, bits in live.items():
             assert np.array_equal(np.asarray(cl.get(h).bits()), bits)
