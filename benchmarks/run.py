@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig23_*   BitWeaving predicate scans  (Section 8.2)
   fig24_*   bitvector set operations    (Section 8.3)
   kern_*    Pallas kernel micro + engine roofline model
+  serve_*   closed-loop multi-tenant serving (continuous batching)
   roofline_* / cell_*  dry-run roofline aggregation (SSRoofline)
 
 Machine-readable output: ``--json out.json`` additionally writes every
@@ -27,7 +28,8 @@ import sys
 
 
 def sections():
-    from . import kernels_micro, paper_apps, paper_tables, roofline
+    from . import (kernels_micro, paper_apps, paper_tables, roofline,
+                   serve_closed_loop)
 
     return [
         paper_tables.fig20_programs,
@@ -39,6 +41,7 @@ def sections():
         paper_apps.fig23_bitweaving,
         paper_apps.fig24_sets,
         kernels_micro.kernels_micro,
+        serve_closed_loop.serve_closed_loop,
         roofline.roofline_rows,
     ]
 

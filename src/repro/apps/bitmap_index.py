@@ -75,6 +75,16 @@ class BitmapIndex:
             acc = acc & Expr.var(nm)
         return acc
 
+    def query_plan(self, names: List[str]) -> Tuple[Expr, Dict[str, object]]:
+        """The popcount(AND over names) query as a submittable plan:
+        (expression, resident-operand env) for ``AmbitRuntime.submit`` /
+        ``serve.QueryFrontend.submit``. Serving frontends batch many
+        tenants' plans into one scheduler drain instead of paying a
+        serialized ``query_and_all`` per query."""
+        if self.runtime is None:
+            raise ValueError("plans need the resident path - pass runtime=")
+        return self._and_tree(names), {nm: self.resident[nm] for nm in names}
+
     def query_and_all(self, names: List[str]) -> Tuple[int, OpStats]:
         """popcount(AND over names) + accumulated engine stats."""
         total = OpStats()

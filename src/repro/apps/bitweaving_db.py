@@ -86,6 +86,48 @@ def scan_expr(bits: int, c1: int, c2: int):
     return (gt1 | eq1) & (lt2 | eq2)
 
 
+def ensure_resident_planes(col: BitWeavingColumn, runtime,
+                           pin_planes: bool = False):
+    """Upload the column's bit planes to ``runtime`` and cache them on the
+    column (keyed by runtime identity), so repeated scans pay zero upload
+    traffic; planes previously resident on a *different* runtime are freed
+    first. The ``near=`` chain co-locates corresponding chunks so the
+    predicate runs without inter-device transfers on sharded runtimes.
+    Returns ``(plane_handles, upload_stats)`` - the stats are zero when
+    the planes were already resident."""
+    from ..core.engine import OpStats
+
+    up = OpStats()
+    resident = getattr(col, "_resident_planes", None)
+    if resident is not None and resident[0] is runtime:
+        return resident[1], up
+    if resident is not None:         # planes on a previous runtime: free
+        for rbv in resident[1]:
+            resident[0].free(rbv)
+    near = None
+    planes = []
+    for i in range(col.bits):
+        rbv = runtime.put(BitVector(col.planes[i], col.n_rows),
+                          name=f"p{i}", near=near, pin=pin_planes)
+        up += runtime.last_stats
+        planes.append(rbv)
+        near = rbv.slots if rbv.slots else near
+    col._resident_planes = (runtime, planes)
+    return planes, up
+
+
+def scan_plan(col: BitWeavingColumn, c1: int, c2: int, runtime,
+              pin_planes: bool = False):
+    """The c1 <= v <= c2 scan as a submittable plan: (expression, env of
+    resident plane handles) for ``AmbitRuntime.submit`` /
+    ``serve.QueryFrontend.submit``. A serving frontend batches many
+    tenants' scans into one drain; planes upload on first use and are
+    shared by every later plan against the same runtime."""
+    planes, _ = ensure_resident_planes(col, runtime, pin_planes=pin_planes)
+    return (scan_expr(col.bits, int(c1), int(c2)),
+            {f"p{i}": rbv for i, rbv in enumerate(planes)})
+
+
 def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
                         runtime, keep_resident: bool = False,
                         pin_planes: bool = False):
@@ -109,21 +151,10 @@ def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
     from ..core.engine import OpStats
 
     total = OpStats()
-    resident = getattr(col, "_resident_planes", None)
-    if resident is None or resident[0] is not runtime:
-        if resident is not None:     # planes on a previous runtime: free
-            for rbv in resident[1]:
-                resident[0].free(rbv)
-        near = None
-        planes = []
-        for i in range(col.bits):
-            rbv = runtime.put(BitVector(col.planes[i], col.n_rows),
-                              name=f"p{i}", near=near, pin=pin_planes)
-            total += runtime.last_stats
-            planes.append(rbv)
-            near = rbv.slots if rbv.slots else near
-        col._resident_planes = resident = (runtime, planes)
-    env = {f"p{i}": rbv for i, rbv in enumerate(resident[1])}
+    planes, up = ensure_resident_planes(col, runtime,
+                                        pin_planes=pin_planes)
+    total += up
+    env = {f"p{i}": rbv for i, rbv in enumerate(planes)}
     out = runtime.eval(scan_expr(col.bits, int(c1), int(c2)), env)
     total += runtime.last_stats
     sel = runtime.get(out)           # the only per-query read-back

@@ -440,7 +440,7 @@ class PimCluster(LruSpillBase):
             cluster=self, n_bits=bv.n_bits, shape=data32.shape[:-1],
             words32=data32.shape[-1],
             chunks=len(chunks) // max(1, int(np.prod(data32.shape[:-1]))),
-            slots=slots, dirty=False, pinned=pin, name=name, _host=bv)
+            slots=slots, dirty=False, name=name, _host=bv)
         nbytes = cbv.device_bytes
         self.host_writes += 1
         self.bytes_to_device += nbytes
@@ -448,6 +448,12 @@ class PimCluster(LruSpillBase):
         self.ledger.host_to_device_bytes += nbytes
         self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
         self._register(cbv)
+        if pin:
+            try:
+                self.pin(cbv)
+            except AmbitError:          # over budget: undo the upload
+                self.free(cbv)
+                raise
         return cbv
 
     def _read_back(self, cbv: ClusterBitVector) -> BitVector:

@@ -202,12 +202,18 @@ class DeviceStore(LruSpillBase):
         rbv = DeviceBitVector(
             store=self, n_bits=bv.n_bits, shape=tuple(data.shape[:-1]),
             words32=int(data.shape[-1]), _dev=None, dirty=False,
-            pinned=pin, name=name, _host=bv)
+            name=name, _host=bv)
         self._make_room(rbv.device_bytes)
         rbv._dev = data
         self.adopt(rbv)
         self.host_writes += 1
         self.bytes_to_device += rbv.device_bytes
+        if pin:
+            try:
+                self.pin(rbv)
+            except AmbitError:          # over budget: undo the upload
+                self.free(rbv)
+                raise
         return rbv
 
     def ensure_resident(self, rbv: DeviceBitVector,
@@ -228,6 +234,31 @@ class DeviceStore(LruSpillBase):
         self.host_writes += 1
         self.bytes_to_device += rbv.device_bytes
         return rbv
+
+    # -- device-side reduction -------------------------------------------------
+
+    def popcount(self, rbv: DeviceBitVector) -> int:
+        """Count set bits WITHOUT reading the bitvector back: the
+        reduction runs on the accelerator (pallas popcount kernel on the
+        pallas backend, ``lax.population_count`` on jnp) and only the
+        int32 total crosses to the host - 4 ledger bytes instead of the
+        whole array. Device arrays are tail-masked by construction
+        (put data comes from packed BitVectors; planner results are
+        masked in ``_device_compiled``), so the full-array count is
+        exact. Spilled handles count their current host copy for free."""
+        self._check_handle(rbv)
+        if rbv.spilled:
+            return int(np.asarray(rbv._host.popcount()).sum())
+        self._touch(rbv)
+        dev = rbv._dev.reshape(-1, rbv.words32)
+        if self.backend == "pallas":
+            from ..kernels import ops as kops
+            total = int(jnp.sum(kops.popcount(dev)))
+        else:
+            total = int(jax.lax.population_count(dev).sum())
+        self.host_reads += 1
+        self.bytes_from_device += 4     # one int32 scalar
+        return total
 
 
 @dataclasses.dataclass

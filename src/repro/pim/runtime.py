@@ -70,7 +70,8 @@ class AmbitRuntime:
                  devices: int = 1, placement: str = ROUND_ROBIN,
                  channel: Optional[ChannelModel] = None,
                  seed: int = 0, backend: str = "ambit_sim",
-                 capacity_bytes: Optional[int] = None):
+                 capacity_bytes: Optional[int] = None,
+                 pin_budget_bytes: Optional[int] = None):
         if backend not in ("ambit_sim", "jnp", "pallas"):
             raise ValueError(backend)
         self.backend = backend
@@ -108,6 +109,7 @@ class AmbitRuntime:
             self.planner = QueryPlanner(self.store, optimize=optimize,
                                         colocate=colocate)
             self._handle_type = ResidentBitVector
+        self.store.pin_budget_bytes = pin_budget_bytes
         self.scheduler = AsyncScheduler(self.store, self.planner,
                                         self._handle_type)
         self.session_stats = OpStats()
@@ -138,6 +140,14 @@ class AmbitRuntime:
 
     def free(self, rbv) -> None:
         self.store.free(rbv)
+
+    def pin(self, rbv) -> None:
+        """Exempt a resident handle from LRU eviction, charged against
+        the store's pin budget (``pin_budget_bytes``)."""
+        self.store.pin(rbv)
+
+    def unpin(self, rbv) -> None:
+        self.store.unpin(rbv)
 
     # -- evaluation ----------------------------------------------------------
 
@@ -179,25 +189,31 @@ class AmbitRuntime:
     # -- async multi-query sessions -------------------------------------------
 
     def submit(self, expression: E.Expr, env: Dict[str, object],
-               out=None, out_name: Optional[str] = None) -> Ticket:
+               out=None, out_name: Optional[str] = None,
+               now_ns: float = 0.0) -> Ticket:
         """Enqueue a query for the next ``drain``. Operands are resident
         handles or tickets of earlier submits (multi-root DAGs execute in
         one drain); queued operands are protected from eviction until
-        their query runs. Returns the query's Ticket."""
+        their query runs. ``now_ns`` stamps the ticket on the caller's
+        simulated clock. Returns the query's Ticket."""
         for nm, v in env.items():
             if not isinstance(v, (self._handle_type, Ticket)):
                 raise TypeError(
                     f"operand {nm!r} is not resident - call put() first "
                     "(the host path is BulkBitwiseEngine.eval)")
         return self.scheduler.submit(expression, env, out=out,
-                                     out_name=out_name)
+                                     out_name=out_name, now_ns=now_ns)
 
-    def drain(self):
+    def drain(self, now_ns: float = 0.0, epoch_cost=None):
         """Execute every queued query, overlapping bank/device-disjoint
         queries in epochs. Returns the tickets in submit order; the
         drain's combined cost (sum of epoch maxima, summed energy/AAPs,
-        fault-in bytes) lands in ``last_stats`` / ``session_stats``."""
-        tickets = self.scheduler.drain()
+        fault-in bytes) lands in ``last_stats`` / ``session_stats``.
+        ``now_ns``/``epoch_cost`` lay the epochs on a simulated clock
+        (per-ticket ``started_ns``/``finished_ns``) for serving
+        frontends - see ``AsyncScheduler.drain``."""
+        tickets = self.scheduler.drain(now_ns=now_ns,
+                                       epoch_cost=epoch_cost)
         if tickets:
             st = OpStats()
             st += self.scheduler.last_drain.stats
@@ -237,8 +253,20 @@ class AmbitRuntime:
                                E.Expr.var("c")), {"a": a, "b": b, "c": c})
 
     def popcount(self, rbv) -> int:
-        """Final reduction runs on the host (Section 9.1 future-op): this
-        reads the result back - the one transfer a resident query pays."""
+        """Count the set bits of a resident bitvector.
+
+        On the accelerator backends the reduction runs device-side
+        (pallas popcount kernel / ``lax.population_count``) and only the
+        int32 total crosses the channel - ``bytes_touched`` charges 4
+        bytes, not the whole array. The DRAM model has no reduction op
+        (Section 9.1 future-op), so ``ambit_sim`` still reads the result
+        back - the one transfer a resident query pays there."""
+        if hasattr(self.store, "popcount"):
+            before = self.store.bytes_from_device
+            count = self.store.popcount(rbv)
+            self._account(OpStats(
+                bytes_touched=self.store.bytes_from_device - before))
+            return count
         return int(self.get(rbv).popcount())
 
     # -- accounting ----------------------------------------------------------

@@ -79,6 +79,24 @@ class Ticket:
     resource_ns: Dict[Resource, float] = dataclasses.field(
         default_factory=dict)
     channel_ns: float = 0.0         # serialized cross-device transfer time
+    # Simulated-clock timestamps (serving frontends): ``submitted_ns`` is
+    # the ``now_ns`` the query was enqueued at; ``started_ns`` /
+    # ``finished_ns`` are assigned by the drain that executes it from the
+    # cumulative epoch timeline (measured epoch ns, or the drain's
+    # ``epoch_cost`` model). -1.0 until the drain runs.
+    submitted_ns: float = 0.0
+    started_ns: float = -1.0
+    finished_ns: float = -1.0
+
+    @property
+    def queue_ns(self) -> float:
+        """Time spent queued before its epoch started."""
+        return self.started_ns - self.submitted_ns
+
+    @property
+    def latency_ns(self) -> float:
+        """Submit-to-completion time on the drain's simulated clock."""
+        return self.finished_ns - self.submitted_ns
 
     def __repr__(self):
         return (f"<Ticket #{self.index} {self.state}"
@@ -95,6 +113,11 @@ class EpochReport:
     resources: List[Resource] = dataclasses.field(default_factory=list)
     ns: float = 0.0
     channel_ns: float = 0.0
+    # Position on the drain's simulated clock: [start_ns, end_ns) where
+    # end - start is the measured epoch ns, or the caller's epoch_cost
+    # model when the backend has no DRAM timing (accelerator stores).
+    start_ns: float = 0.0
+    end_ns: float = 0.0
 
 
 @dataclasses.dataclass
@@ -107,10 +130,17 @@ class DrainReport:
     epochs: List[EpochReport] = dataclasses.field(default_factory=list)
     stats: OpStats = dataclasses.field(default_factory=OpStats)
     serial_ns: float = 0.0
+    start_ns: float = 0.0           # the drain's ``now_ns``
+    end_ns: float = 0.0             # clock after the last epoch
 
     @property
     def n_queries(self) -> int:
         return sum(len(e.tickets) for e in self.epochs)
+
+    @property
+    def wall_ns(self) -> float:
+        """Simulated wall time the drain occupied the device for."""
+        return self.end_ns - self.start_ns
 
 
 class AsyncScheduler:
@@ -129,11 +159,15 @@ class AsyncScheduler:
     # -- submission ----------------------------------------------------------
 
     def submit(self, expression: E.Expr, env: Dict[str, object],
-               out=None, out_name: Optional[str] = None) -> Ticket:
+               out=None, out_name: Optional[str] = None,
+               now_ns: float = 0.0) -> Ticket:
         """Enqueue a query; returns its Ticket. Operands may be resident
         handles or tickets of earlier-submitted queries (their result is
         consumed without an intermediate drain). All operands are held -
-        protected from eviction and free - until the query executes."""
+        protected from eviction and free - until the query executes.
+        ``now_ns`` stamps the ticket's submit time on the caller's
+        simulated clock (serving frontends measure queueing delay from
+        it)."""
         if not env:
             raise ValueError("scheduler needs at least one operand")
         resolved: Dict[str, object] = {}
@@ -175,10 +209,15 @@ class AsyncScheduler:
             raise
         t = Ticket(scheduler=self, index=self._submitted,
                    expression=expression, env=resolved, out=out,
-                   out_name=out_name)
+                   out_name=out_name, submitted_ns=now_ns)
         self._submitted += 1
         self.pending.append(t)
         return t
+
+    def oldest_pending_ns(self) -> Optional[float]:
+        """Earliest ``submitted_ns`` among queued tickets (None when the
+        queue is empty) - the deadline signal a batching window checks."""
+        return min((t.submitted_ns for t in self.pending), default=None)
 
     def cancel(self, ticket: Ticket) -> None:
         """Drop a queued ticket and release its operand holds. Queries
@@ -289,11 +328,20 @@ class AsyncScheduler:
 
     # -- execution ------------------------------------------------------------
 
-    def drain(self) -> List[Ticket]:
+    def drain(self, now_ns: float = 0.0, epoch_cost=None) -> List[Ticket]:
         """Execute every queued query and return the tickets in submit
         order. Execution order IS submit order - epochs only change how
         time is accounted - so energy/AAP ledgers are identical to serial
-        evaluation and results are bit-identical."""
+        evaluation and results are bit-identical.
+
+        ``now_ns`` is the simulated clock the drain starts at; epochs are
+        laid end to end from it and every ticket gets ``started_ns`` /
+        ``finished_ns`` from its epoch's interval. The interval length is
+        the measured epoch ns; ``epoch_cost(erep, tickets) -> ns``
+        overrides it for backends whose DRAM-model ns is zero (the
+        accelerator stores), WITHOUT touching the conservation-exact
+        ``stats`` ledger - the timeline is an overlay, never a
+        re-measurement."""
         tickets, self.pending = self.pending, []
         if not tickets:
             return []
@@ -331,9 +379,10 @@ class AsyncScheduler:
             raise
         # accounting: epoch ns = max over resources of summed per-resource
         # ns, plus the epoch's serialized channel transfers
-        report = DrainReport()
+        report = DrainReport(start_ns=now_ns)
         by_index = {t.index: t for t in tickets}
         total = OpStats()
+        clock = now_ns
         for erep in epochs:
             per_res: Dict[Resource, float] = {}
             for ti in erep.tickets:
@@ -342,9 +391,18 @@ class AsyncScheduler:
                     per_res[r] = per_res.get(r, 0.0) + t.resource_ns[r]
                 erep.channel_ns += t.channel_ns
             erep.ns = max(per_res.values(), default=0.0) + erep.channel_ns
+            dur = erep.ns if epoch_cost is None else float(
+                epoch_cost(erep, [by_index[ti] for ti in erep.tickets]))
+            erep.start_ns = clock
+            erep.end_ns = clock + dur
+            for ti in erep.tickets:
+                by_index[ti].started_ns = erep.start_ns
+                by_index[ti].finished_ns = erep.end_ns
+            clock = erep.end_ns
             report.epochs.append(erep)
             total.ns += erep.ns
             total.channel_ns += erep.channel_ns
+        report.end_ns = clock
         for t in tickets:
             total.energy_nj += t.stats.energy_nj
             total.aap_count += t.stats.aap_count

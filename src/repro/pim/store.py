@@ -156,6 +156,42 @@ class LruSpillBase:
         # executed must survive until their query runs - they are skipped
         # by eviction and cannot be freed or explicitly spilled.
         self._held: Dict[int, int] = {}
+        # Pinning budget: ``pin``/``put(pin=True)`` charge the handle's
+        # device bytes against ``pin_budget_bytes`` (None = unlimited), so
+        # a shared device can cap how much of it tenants may exempt from
+        # eviction. Only handles billed through ``pin`` are refunded at
+        # unpin/free - a direct ``rbv.pinned = True`` poke stays the
+        # documented unbudgeted escape hatch.
+        self.pinned_bytes = 0
+        self.pin_budget_bytes: Optional[int] = None
+        self._pin_billed: set = set()
+
+    def pin(self, rbv) -> None:
+        """Exempt a handle from eviction, charging its bytes against the
+        pin budget. Raises AmbitError when the budget would overflow."""
+        self._check_handle(rbv)
+        if rbv.pinned:
+            return
+        nbytes = rbv.device_bytes
+        if self.pin_budget_bytes is not None and \
+                self.pinned_bytes + nbytes > self.pin_budget_bytes:
+            raise AmbitError(
+                f"pin budget exceeded: {self.pinned_bytes} B already "
+                f"pinned + {nbytes} B would pass the "
+                f"{self.pin_budget_bytes} B budget")
+        rbv.pinned = True
+        self.pinned_bytes += nbytes
+        self._pin_billed.add(id(rbv))
+
+    def unpin(self, rbv) -> None:
+        """Make a pinned handle evictable again and refund its budget."""
+        self._check_handle(rbv)
+        if not rbv.pinned:
+            return
+        rbv.pinned = False
+        if id(rbv) in self._pin_billed:
+            self._pin_billed.discard(id(rbv))
+            self.pinned_bytes -= rbv.device_bytes
 
     def hold(self, rbv) -> None:
         """Protect a handle from eviction/free until ``release``. Refcounted:
@@ -221,6 +257,10 @@ class LruSpillBase:
             raise AmbitError(
                 f"cannot free {rbv!r}: a queued query still reads it "
                 "(drain the scheduler first)")
+        if id(rbv) in self._pin_billed:     # refund the pin budget
+            self._pin_billed.discard(id(rbv))
+            self.pinned_bytes -= rbv.device_bytes
+        rbv.pinned = False
         self._release_rows(rbv)
         self._unregister(rbv)
         rbv.spilled = False
@@ -429,10 +469,16 @@ class PimStore(LruSpillBase):
             store=self, n_bits=bv.n_bits, shape=data32.shape[:-1],
             words32=data32.shape[-1],
             chunks=len(chunks) // max(1, int(np.prod(data32.shape[:-1]))),
-            slots=slots, dirty=False, pinned=pin, name=name, _host=bv)
+            slots=slots, dirty=False, name=name, _host=bv)
         self.host_writes += 1
         self.bytes_to_device += rbv.device_bytes
         self._register(rbv)
+        if pin:
+            try:
+                self.pin(rbv)
+            except AmbitError:          # over budget: undo the upload
+                self.free(rbv)
+                raise
         return rbv
 
     def _read_back(self, rbv: ResidentBitVector) -> BitVector:

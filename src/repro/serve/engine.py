@@ -5,12 +5,21 @@ sequences are replaced by queued requests at the next prefill boundary.
 Greedy or temperature sampling. This is the host-side loop around the
 jitted prefill/decode_step functions that the dry-run lowers for the
 production mesh.
+
+Termination contract: EVERY sampled token - including the one sampled
+from the prefill logits - is checked against ``eos_id`` before it is
+recorded; a request is marked ``done`` the moment it finishes (EOS or
+``max_new_tokens`` reached), not in a blanket pass afterwards; and the
+decode loop stops as soon as every *real* request is finished - padded
+slots of a partial batch never keep it alive. ``decode_steps`` counts
+the decode iterations actually executed, so tests (and the serving
+metrics) can assert no wasted steps.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +47,7 @@ class ServeEngine:
         self.slots = batch_slots
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
+        self.decode_steps = 0       # decode iterations actually executed
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, skv=max_seq))
         self._decode = jax.jit(model.decode_step)
@@ -50,10 +60,41 @@ class ServeEngine:
             sub, logits / self.temperature).astype(jnp.int32)
 
     def generate(self, requests: List[Request]) -> List[Request]:
-        """Serve all requests, `slots` at a time (padded static batch)."""
+        """Serve all requests, `slots` at a time (padded static batch).
+        ``generate([])`` is a no-op; invalid requests raise before any
+        prefill runs (no partial generation on bad input)."""
+        for r in requests:
+            if len(r.prompt) == 0:
+                raise ValueError("empty prompt (nothing to prefill)")
+            if len(r.prompt) > self.max_seq:
+                raise ValueError(
+                    f"prompt length {len(r.prompt)} exceeds max_seq="
+                    f"{self.max_seq} (the KV cache would be written out "
+                    "of range)")
+            if r.max_new_tokens < 1:
+                raise ValueError(
+                    f"max_new_tokens={r.max_new_tokens} must be >= 1")
         for lo in range(0, len(requests), self.slots):
             self._generate_batch(requests[lo:lo + self.slots])
         return requests
+
+    def _record(self, reqs: Sequence[Request], tok: jnp.ndarray,
+                done: np.ndarray) -> None:
+        """Record one sampled token per still-running request, applying
+        the EOS check and max_new_tokens cutoff uniformly (the prefill
+        token goes through this exact path too)."""
+        for i, r in enumerate(reqs):
+            if done[i]:
+                continue
+            t = int(tok[i])
+            if r.eos_id is not None and t == r.eos_id:
+                done[i] = True
+                r.done = True
+                continue
+            r.out.append(t)
+            if len(r.out) >= r.max_new_tokens:
+                done[i] = True
+                r.done = True
 
     def _generate_batch(self, reqs: List[Request]) -> None:
         b = self.slots
@@ -67,27 +108,17 @@ class ServeEngine:
         tok = self._sample(logits)
         max_new = max(r.max_new_tokens for r in reqs)
         done = np.zeros(b, bool)
-        for i, r in enumerate(reqs):
-            r.out.append(int(tok[i]))
+        done[len(reqs):] = True         # padded slots: nothing to serve
+        self._record(reqs, tok, done)
         for _ in range(max_new - 1):
+            if done.all() or bool((pos >= self.max_seq - 1).all()):
+                break                   # pos is uniform across slots
             logits, caches = self._decode(
                 self.params, caches,
                 {"tokens": tok[:, None], "pos": pos})
+            self.decode_steps += 1
             tok = self._sample(logits)
             pos = pos + 1
-            if bool((pos >= self.max_seq - 1).any()):
-                break
-            for i, r in enumerate(reqs):
-                if done[i] or len(r.out) >= r.max_new_tokens:
-                    done[i] = True
-                    continue
-                t = int(tok[i])
-                if r.eos_id is not None and t == r.eos_id:
-                    done[i] = True
-                    r.done = True
-                    continue
-                r.out.append(t)
-            if done.all():
-                break
+            self._record(reqs, tok, done)
         for r in reqs:
             r.done = True
