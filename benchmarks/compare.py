@@ -25,6 +25,15 @@ from typing import Dict
 _INT = re.compile(r"^-?\d+$")
 _TOKEN = re.compile(r"([A-Za-z_][\w.]*)=(\S+)")
 
+# Observability tokens every row of a family MUST carry (name-prefix ->
+# required integer tokens). A serving row that silently stops reporting
+# packing efficiency or bank utilization is a regression even if the
+# baseline predates the token, so presence is checked on the *current*
+# run, not just diffed.
+_REQUIRED_TOKENS = {
+    "serve_": ("pack_eff_pct", "bank_busy_pct"),
+}
+
 
 def structural(doc: dict) -> Dict[str, Dict[str, int]]:
     """name -> {derived integer tokens} for one run.py --json document."""
@@ -41,6 +50,15 @@ def structural(doc: dict) -> Dict[str, Dict[str, int]]:
 def diff(current: dict, baseline: dict) -> list:
     cur, base = structural(current), structural(baseline)
     problems = []
+    for name in sorted(cur):
+        for prefix, required in _REQUIRED_TOKENS.items():
+            if not name.startswith(prefix):
+                continue
+            for key in required:
+                if key not in cur[name]:
+                    problems.append(
+                        f"{name}: required token {key}= missing from "
+                        f"current run")
     for name in sorted(set(base) - set(cur)):
         problems.append(f"missing benchmark row: {name}")
     for name in sorted(set(cur) - set(base)):

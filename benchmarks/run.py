@@ -20,17 +20,26 @@ structural fields (names, op counts, ledger bytes/ns) diff cleanly
 across machines - see benchmarks/compare.py and the committed
 BENCH_kernels.json baseline. ``--sections kernels_micro`` (comma list,
 substring match on section function names) restricts the run.
+``--trace DIR`` threads a simulated-clock Tracer through the sections
+that support it (serving) and writes Chrome/Perfetto trace JSON per
+row into DIR - summarise with ``python tools/trace_report.py``.
 """
 
 import argparse
+import functools
 import json
 import sys
 
 
-def sections():
+def sections(trace_dir=None):
     from . import (kernels_micro, paper_apps, paper_tables, roofline,
                    serve_closed_loop)
 
+    serve = serve_closed_loop.serve_closed_loop
+    if trace_dir is not None:
+        traced = functools.partial(serve, trace_dir=trace_dir)
+        functools.update_wrapper(traced, serve)
+        serve = traced
     return [
         paper_tables.fig20_programs,
         paper_tables.fig20_batched,
@@ -41,7 +50,7 @@ def sections():
         paper_apps.fig23_bitweaving,
         paper_apps.fig24_sets,
         kernels_micro.kernels_micro,
-        serve_closed_loop.serve_closed_loop,
+        serve,
         roofline.roofline_rows,
     ]
 
@@ -54,6 +63,9 @@ def main(argv=None) -> None:
     ap.add_argument("--sections", default=None,
                     help="comma-separated substring filter on section "
                          "function names (e.g. 'kernels_micro')")
+    ap.add_argument("--trace", metavar="DIR", default=None,
+                    help="write Chrome/Perfetto trace JSON per serving "
+                         "row into DIR")
     args = ap.parse_args(argv)
 
     wanted = None
@@ -62,7 +74,7 @@ def main(argv=None) -> None:
 
     print("name,us_per_call,derived")
     rows, failures = [], 0
-    for fn in sections():
+    for fn in sections(trace_dir=args.trace):
         if wanted is not None and \
                 not any(w in fn.__name__ for w in wanted):
             continue

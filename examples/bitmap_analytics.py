@@ -107,6 +107,25 @@ def main():
           f"{rt_dev.host_reads}, fused launches: "
           f"{rt_dev.planner.kernel_launches})")
 
+    # Observability: the same ledgers as labeled metric series. Bytes
+    # are broken down by WHY they crossed the channel (upload vs
+    # fault-in vs spill vs read-back) and per-bank busy ns comes from
+    # the planner's bank_busy_ns counter - the series the utilization
+    # report and trace exporter consume (see README "Observability").
+    snap = rt.metrics_snapshot()
+    io = {k: int(v) for k, v in snap["counters"].items()
+          if k.startswith("store_io_bytes")}
+    busy = {k: v for k, v in snap["counters"].items()
+            if k.startswith("bank_busy_ns")}
+    print("[metrics  ] bytes by cause:")
+    for k in sorted(io):
+        print(f"             {k} = {io[k]}")
+    total_busy = sum(busy.values())
+    print(f"[metrics  ] banks={len(busy)} total_busy_ns={total_busy:.0f}"
+          + (f" mean_busy_pct="
+             f"{100.0 * total_busy / (len(busy) * res_st.ns):.1f}"
+             if busy and res_st.ns else ""))
+
     # Analytic model (what this example used to print) for comparison.
     n_ops = 2 * weeks - 1
     rows = n_users // 65536

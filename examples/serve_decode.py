@@ -35,6 +35,15 @@ def main():
     for i, r in enumerate(reqs):
         print(f"req{i}: prompt={r.prompt.tolist()} -> {r.out}")
 
+    # Observability: the engine's MetricsRegistry counts the serving
+    # loop's work - prefill batches, decode iterations actually executed
+    # (the termination-contract number), tokens sampled, and completions
+    # broken down by why each request finished.
+    snap = eng.metrics.snapshot()
+    print("metrics:")
+    for k, v in sorted(snap["counters"].items()):
+        print(f"  {k} = {int(v)}")
+
 
 if __name__ == "__main__":
     main()

@@ -48,6 +48,7 @@ from .compiler import CompiledProgram, compile_expr
 from .geometry import DEFAULT_GEOMETRY, DRAMGeometry
 from .simulator import AmbitSubarray
 from .timing import DEFAULT_TIMING, CommandStats, TimingParams
+from ..obs import NULL_TRACER, MetricsRegistry, Tracer
 
 
 @dataclasses.dataclass
@@ -176,7 +177,9 @@ class BulkBitwiseEngine:
     def __init__(self, backend: str = "jnp",
                  geometry: DRAMGeometry = DEFAULT_GEOMETRY,
                  timing: TimingParams = DEFAULT_TIMING,
-                 optimize: bool = True, batch_rows: bool = True):
+                 optimize: bool = True, batch_rows: bool = True,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if backend not in ("jnp", "pallas", "ambit_sim"):
             raise ValueError(backend)
         self.backend = backend
@@ -187,6 +190,10 @@ class BulkBitwiseEngine:
         # (differential-testing / benchmark baseline; ambit_sim only).
         self.batch_rows = batch_rows
         self.last_stats: Optional[OpStats] = None
+        # Observability: metrics are always on (cheap counter adds);
+        # span tracing is opt-in via a live Tracer (zero overhead off).
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     # -- expression evaluation ------------------------------------------------
 
@@ -209,6 +216,9 @@ class BulkBitwiseEngine:
         self.last_stats = OpStats(
             bytes_touched=sum(v.nbytes for v in env.values())
             + (out.nbytes if hasattr(out, "nbytes") else 0))
+        self.metrics.counter("engine_evals").inc(1, backend=self.backend)
+        self.metrics.counter("engine_bytes_touched").inc(
+            self.last_stats.bytes_touched, backend=self.backend)
         return BitVector(out, n_bits)
 
     # -- bbop-style binary ops -------------------------------------------------
@@ -357,6 +367,18 @@ class BulkBitwiseEngine:
                                   aap_count=total.aap_count,
                                   bytes_touched=out32.nbytes +
                                   sum(v.nbytes for v in env.values()))
+        self.metrics.counter("engine_evals").inc(1, backend=self.backend)
+        self.metrics.counter("engine_bytes_touched").inc(
+            self.last_stats.bytes_touched, backend=self.backend)
+        self.metrics.counter("engine_aap_macros").inc(total.aap_count)
+        self.metrics.counter("engine_ns").inc(total.ns)
+        if self.tracer.enabled:
+            # AAP macro batch: one span per compiled-program execution on
+            # the engine's busy-time track.
+            self.tracer.tick(("engine", "ambit_sim"), "aap_batch", "engine",
+                             total.ns, args={"aaps": total.aap_count,
+                                             "rows": n_rows,
+                                             "vars": len(names)})
         bv = BitVector(jnp.asarray(out32), n_bits)
         # Padding rows beyond n_bits may be garbage from scratch state: mask.
         from .bitvector import _mask_tail

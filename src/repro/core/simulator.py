@@ -336,6 +336,11 @@ class AmbitDevice:
         self.row_bytes = self.words * 8
         self.batch_groups = batch_groups
         self._allocator = None  # lazy RowAllocator (pim.allocator)
+        # Opt-in span tracing (repro.obs): the runtime swaps in a live
+        # Tracer; migrate_row emits RowClone-PSM / inter-bank copy spans.
+        from ..obs import NULL_TRACER
+        self.tracer = NULL_TRACER
+        self.trace_name = "device0"     # track prefix (cluster device idx)
 
     # -- allocator (Section 5.2 driver) --------------------------------------
 
@@ -461,15 +466,30 @@ class AmbitDevice:
         sb, ss, sr = src
         db, ds, dr = dst
         bank = self.banks[db]
+        n_lines = self.row_bytes // 64
         if sb == db:
             bank.psm_copy(ss, sr, ds, dr)
+            if self.tracer.enabled:
+                # mirror psm_copy's charge so the span length IS the cost
+                dur = (2 * DEFAULT_TIMING.tRAS
+                       + n_lines * AmbitBank.PSM_NS_PER_CACHELINE
+                       + DEFAULT_TIMING.tRP)
+                self.tracer.tick(
+                    (self.trace_name, f"bank{db}", "migrate"),
+                    "rowclone_psm", "migrate", dur,
+                    args={"src": list(src), "dst": list(dst)})
             return
         data = self.banks[sb].subarrays[ss].read_row(sr)
         bank.subarrays[ds].write_row(dr, data)
-        n_lines = self.row_bytes // 64
-        bank.stats.ns += 2 * DEFAULT_TIMING.tRAS + \
+        dur = 2 * DEFAULT_TIMING.tRAS + \
             n_lines * AmbitBank.PSM_NS_PER_CACHELINE
+        bank.stats.ns += dur
         bank.stats.energy_nj += n_lines * AmbitBank.PSM_NJ_PER_CACHELINE
+        if self.tracer.enabled:
+            self.tracer.tick(
+                (self.trace_name, f"bank{db}", "migrate"),
+                "interbank_copy", "migrate", dur,
+                args={"src": list(src), "dst": list(dst)})
 
     def _stage_psm(self, db: int, ds: int, src: tuple, scratch: int) -> None:
         """Stage a non-co-located source row into scratch row `scratch` of

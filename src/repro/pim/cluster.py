@@ -215,6 +215,22 @@ class PimCluster(LruSpillBase):
     """N AmbitDevices behind one PimStore-compatible put/get/free API."""
 
     _handle_desc = "cluster bitvector"
+    _obs_name = "cluster"
+
+    def _charge_io(self, direction: str, cause: str, nbytes: int) -> None:
+        """Cluster host IO additionally lands in the ChannelLedger with
+        its modeled channel time - same single-site contract as the
+        base: legacy counters, ledger, and metrics move together."""
+        super()._charge_io(direction, cause, nbytes)
+        hns = self.channel.host_transfer_ns(nbytes)
+        if direction == "to_device":
+            self.ledger.host_writes += 1
+            self.ledger.host_to_device_bytes += nbytes
+        else:
+            self.ledger.host_reads += 1
+            self.ledger.device_to_host_bytes += nbytes
+        self.ledger.host_ns += hns
+        self.metrics.counter("host_channel_ns").inc(hns)
 
     def __init__(self, devices: int = 2,
                  geometry: DRAMGeometry = DEFAULT_GEOMETRY,
@@ -378,11 +394,7 @@ class PimCluster(LruSpillBase):
             for k, i in enumerate(idxs):
                 cbv._stash[i] = rows[k].copy()
             nbytes = len(idxs) * self.row_bytes
-            self.host_reads += 1
-            self.bytes_from_device += nbytes
-            self.ledger.host_reads += 1
-            self.ledger.device_to_host_bytes += nbytes
-            self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+            self._charge_io("from_device", "spill", nbytes)
             self.evicted_dirty += 1
         else:
             self.evicted_clean += 1     # host copy current: free
@@ -441,12 +453,7 @@ class PimCluster(LruSpillBase):
             words32=data32.shape[-1],
             chunks=len(chunks) // max(1, int(np.prod(data32.shape[:-1]))),
             slots=slots, dirty=False, name=name, _host=bv)
-        nbytes = cbv.device_bytes
-        self.host_writes += 1
-        self.bytes_to_device += nbytes
-        self.ledger.host_writes += 1
-        self.ledger.host_to_device_bytes += nbytes
-        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        self._charge_io("to_device", "upload", cbv.device_bytes)
         self._register(cbv)
         if pin:
             try:
@@ -474,12 +481,8 @@ class PimCluster(LruSpillBase):
         cbv.dirty = False
         cbv._stash.clear()              # host copy now covers every chunk
         # only rows that actually crossed the channel are charged
-        nbytes = cbv.resident_bytes
-        self.host_reads += 1
-        self.bytes_from_device += nbytes
-        self.ledger.host_reads += 1
-        self.ledger.device_to_host_bytes += nbytes
-        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        self._charge_io("from_device", self._io_cause or "read_back",
+                        cbv.resident_bytes)
         return out
 
     def ensure_resident(self, cbv: ClusterBitVector,
@@ -514,12 +517,7 @@ class PimCluster(LruSpillBase):
         cbv.slots = slots
         cbv.spilled = False
         cbv.dirty = False
-        nbytes = cbv.device_bytes
-        self.host_writes += 1
-        self.bytes_to_device += nbytes
-        self.ledger.host_writes += 1
-        self.ledger.host_to_device_bytes += nbytes
-        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        self._charge_io("to_device", "fault_in", cbv.device_bytes)
         self._register(cbv)
         return cbv
 
@@ -556,12 +554,8 @@ class PimCluster(LruSpillBase):
             raise
         for i in missing:
             cbv._stash.pop(i, None)     # device copy is current again
-        nbytes = len(missing) * self.row_bytes
-        self.host_writes += 1
-        self.bytes_to_device += nbytes
-        self.ledger.host_writes += 1
-        self.ledger.host_to_device_bytes += nbytes
-        self.ledger.host_ns += self.channel.host_transfer_ns(nbytes)
+        self._charge_io("to_device", "fault_in",
+                        len(missing) * self.row_bytes)
         self._touch(cbv)
         return cbv
 
@@ -622,14 +616,22 @@ class PimCluster(LruSpillBase):
             self.allocators[src_d].free([src_slot])
             cbv.slots[i] = (target, new_slot)
             anchor = anchor or new_slot
+            hop_ns = self.channel.device_to_device_ns(src_d, target,
+                                                      self.row_bytes)
             self.ledger.inter_device_rows += 1
             self.ledger.inter_device_bytes += self.row_bytes
-            self.ledger.inter_device_ns += \
-                self.channel.device_to_device_ns(src_d, target,
-                                                 self.row_bytes)
+            self.ledger.inter_device_ns += hop_ns
             self.ledger.inter_device_nj += \
                 self.channel.device_to_device_nj(src_d, target,
                                                  self.row_bytes)
+            self.metrics.counter("inter_device_rows").inc(1)
+            self.metrics.counter("inter_device_bytes").inc(self.row_bytes)
+            self.metrics.counter("inter_device_ns").inc(hop_ns)
+            if self.tracer.enabled:
+                self.tracer.instant(
+                    ("cluster", "channel"), "migrate_chunk", "channel",
+                    args={"src": src_d, "dst": target,
+                          "bytes": int(self.row_bytes)})
             moved += 1
         return moved
 
@@ -763,6 +765,23 @@ class ClusterPlanner:
             channel_ns=report.transfer_ns,
             channel_bytes=report.transfer_bytes)
         self.last_report = report
+
+        # Per-(device,bank) busy time is the occupancy signal the
+        # utilization report divides by the drain wall clock. Counted
+        # here (not in the per-device QueryPlanners, whose registries
+        # are private to their stores) so each bank-ns is billed once.
+        m = cl.metrics
+        m.counter("plan_executions").inc(1)
+        for (d, b) in sorted(report.per_bank):
+            st = report.per_bank[(d, b)]
+            if st.ns:
+                m.counter("bank_busy_ns").inc(st.ns, device=d, bank=b)
+        if cl.tracer.enabled:
+            cl.tracer.tick(
+                ("planner", "cluster"), "plan", "plan", report.stats.ns,
+                args={"devices": len(report.per_device_ns),
+                      "transfer_rows": report.transferred_rows,
+                      "aaps": report.stats.aap_count})
 
         out = ClusterBitVector(
             cluster=cl, n_bits=first.n_bits, shape=first.shape,

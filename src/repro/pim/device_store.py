@@ -117,6 +117,7 @@ class DeviceStore(LruSpillBase):
     through the ledger first."""
 
     _handle_desc = "device bitvector"
+    _obs_name = "device_store"
 
     def __init__(self, backend: str = "jnp",
                  capacity_bytes: Optional[int] = None):
@@ -158,8 +159,8 @@ class DeviceStore(LruSpillBase):
         out = BitVector(np.asarray(rbv._dev), rbv.n_bits)
         rbv._host = out
         rbv.dirty = False
-        self.host_reads += 1
-        self.bytes_from_device += rbv.device_bytes
+        self._charge_io("from_device", self._io_cause or "read_back",
+                        rbv.device_bytes)
         return out
 
     def spill(self, rbv: DeviceBitVector, _force_held: bool = False) -> None:
@@ -206,8 +207,7 @@ class DeviceStore(LruSpillBase):
         self._make_room(rbv.device_bytes)
         rbv._dev = data
         self.adopt(rbv)
-        self.host_writes += 1
-        self.bytes_to_device += rbv.device_bytes
+        self._charge_io("to_device", "upload", rbv.device_bytes)
         if pin:
             try:
                 self.pin(rbv)
@@ -231,8 +231,7 @@ class DeviceStore(LruSpillBase):
         rbv.spilled = False
         rbv.dirty = False
         self.adopt(rbv)
-        self.host_writes += 1
-        self.bytes_to_device += rbv.device_bytes
+        self._charge_io("to_device", "fault_in", rbv.device_bytes)
         return rbv
 
     # -- device-side reduction -------------------------------------------------
@@ -256,8 +255,7 @@ class DeviceStore(LruSpillBase):
             total = int(jnp.sum(kops.popcount(dev)))
         else:
             total = int(jax.lax.population_count(dev).sum())
-        self.host_reads += 1
-        self.bytes_from_device += 4     # one int32 scalar
+        self._charge_io("from_device", "popcount", 4)   # one int32 scalar
         return total
 
 
@@ -376,7 +374,22 @@ class DevicePlanner:
         self.last_report = DeviceReport(
             queries=1, kernel_launches=1,
             donated=0 if donate_idx is None else 1, stats=OpStats())
+        self._record_dispatch(queries=1,
+                              donated=0 if donate_idx is None else 1)
         return res
+
+    def _record_dispatch(self, queries: int, donated: int = 0) -> None:
+        m = self.store.metrics
+        m.counter("fused_dispatches").inc(1)
+        m.counter("fused_queries").inc(queries)
+        if donated:
+            m.counter("donated_buffers").inc(donated)
+        tr = self.store.tracer
+        if tr.enabled:
+            tr.instant(("device_store", "dispatch"), "fused_dispatch",
+                       "dispatch", args={"queries": queries,
+                                         "backend": self.backend,
+                                         "donated": donated})
 
     def execute_epoch(self, jobs: Sequence[tuple]) -> List[DeviceBitVector]:
         """Dispatch one scheduler epoch - ``(expression, env, out_name,
@@ -422,4 +435,5 @@ class DevicePlanner:
             results.append(res)
         self.last_report = DeviceReport(queries=len(jobs),
                                         kernel_launches=1, stats=OpStats())
+        self._record_dispatch(queries=len(jobs))
         return results

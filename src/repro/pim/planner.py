@@ -188,6 +188,28 @@ class QueryPlanner:
             bytes_touched=0)        # resident: no host traffic
         self.last_report = report
 
+        # Observability: per-bank busy ns is the occupancy series the
+        # utilization report divides by wall time. ``device=0`` because a
+        # lone PimStore is device 0; under a PimCluster these land in the
+        # per-device store's private registry while the ClusterPlanner
+        # bills the shared one with real device indices.
+        m = self.store.metrics
+        m.counter("plan_executions").inc(1)
+        m.counter("plan_groups").inc(report.groups)
+        if report.staged_rows:
+            m.counter("plan_staged_rows").inc(report.staged_rows)
+        for b in sorted(report.per_bank):
+            st = report.per_bank[b]
+            if st.ns:
+                m.counter("bank_busy_ns").inc(st.ns, device=0, bank=b)
+        tr = self.store.tracer
+        if tr.enabled:
+            tr.tick(("planner", "device0"), "plan", "plan", report.stats.ns,
+                    args={"groups": report.groups,
+                          "migrated_rows": report.migrated_rows,
+                          "staged_rows": report.staged_rows,
+                          "aaps": report.stats.aap_count})
+
         return self.store.adopt(ResidentBitVector(
             store=self.store, n_bits=first.n_bits, shape=first.shape,
             words32=first.words32, chunks=first.chunks, slots=dst_slots,

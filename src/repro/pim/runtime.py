@@ -38,6 +38,7 @@ from ..core.engine import OpStats, binop_expr
 from ..core.geometry import DEFAULT_GEOMETRY, DRAMGeometry
 from ..core.simulator import AmbitDevice
 from ..core.timing import DEFAULT_TIMING, TimingParams
+from ..obs import NULL_TRACER, MetricsRegistry, Tracer
 from .allocator import STRIPED
 from .cluster import (ChannelModel, ClusterBitVector, PimCluster,
                       ROUND_ROBIN)
@@ -71,7 +72,9 @@ class AmbitRuntime:
                  channel: Optional[ChannelModel] = None,
                  seed: int = 0, backend: str = "ambit_sim",
                  capacity_bytes: Optional[int] = None,
-                 pin_budget_bytes: Optional[int] = None):
+                 pin_budget_bytes: Optional[int] = None,
+                 tracer: Optional[Tracer] = None,
+                 metrics: Optional[MetricsRegistry] = None):
         if backend not in ("ambit_sim", "jnp", "pallas"):
             raise ValueError(backend)
         self.backend = backend
@@ -114,6 +117,25 @@ class AmbitRuntime:
                                         self._handle_type)
         self.session_stats = OpStats()
         self.last_stats: Optional[OpStats] = None
+        # Observability (repro.obs): the store owns the session's
+        # MetricsRegistry (its IO sites charge it unconditionally - see
+        # LruSpillBase._charge_io); a caller-supplied registry replaces
+        # it, and a live tracer is threaded through every layer. The
+        # disabled NULL_TRACER default makes untraced runs record
+        # nothing at zero cost.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        if metrics is not None:
+            self.store.metrics = metrics
+        self.metrics = self.store.metrics
+        self.store.tracer = self.tracer
+        if self.cluster is not None:
+            for d, dev in enumerate(self.cluster.devices):
+                dev.tracer = self.tracer
+                dev.trace_name = f"device{d}"
+        elif self.device is not None:
+            self.device.tracer = self.tracer
+        # Session-simulated clock: advanced by every call's modeled ns.
+        self.clock_ns = 0.0
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -282,3 +304,14 @@ class AmbitRuntime:
     def _account(self, st: OpStats) -> None:
         self.last_stats = st
         self.session_stats += st
+        self.clock_ns += st.ns
+        m = self.metrics
+        m.counter("runtime_calls").inc(1)
+        m.counter("runtime_ns").inc(st.ns)
+        m.counter("runtime_energy_nj").inc(st.energy_nj)
+        m.counter("runtime_aaps").inc(st.aap_count)
+        m.counter("runtime_bytes_touched").inc(st.bytes_touched)
+
+    def metrics_snapshot(self) -> dict:
+        """JSON-safe dump of the session's metrics registry."""
+        return self.metrics.snapshot()

@@ -87,6 +87,14 @@ class Ticket:
     submitted_ns: float = 0.0
     started_ns: float = -1.0
     finished_ns: float = -1.0
+    # Why this query did not land in epoch 0: the packing constraints
+    # that bound it (recorded by ``_form_epochs``). Each entry is one of
+    # ``dep:#N`` (reads ticket N's result), ``read-after-write:<name>``,
+    # ``write-conflict`` (out= destination clash), ``bank-conflict``
+    # (resource overlap with an earlier epoch), ``stack-shape`` (epoch
+    # key mismatch on a stacking backend). Empty = ran in the first
+    # epoch it was eligible for with nothing in its way.
+    deferred: List[str] = dataclasses.field(default_factory=list)
 
     @property
     def queue_ns(self) -> float:
@@ -284,6 +292,17 @@ class AsyncScheduler:
             fp = self._footprint(t, cache)
             key = keyer(t.expression, t.env) if keyer else None
             floor = 0
+            why: List[str] = []     # the binding defer reasons
+
+            def bump(new_floor: int, reason: str) -> None:
+                nonlocal floor
+                if new_floor > floor:
+                    floor = new_floor
+                    why.clear()
+                    why.append(reason)
+                elif new_floor == floor and floor > 0 and reason not in why:
+                    why.append(reason)
+
             for nm in sorted(t.env):
                 v = t.env[nm]
                 if isinstance(v, Ticket):       # result-after-execute
@@ -291,19 +310,22 @@ class AsyncScheduler:
                         raise AmbitError(
                             f"operand {nm!r} of ticket #{t.index} is a "
                             f"{v.state} ticket not part of this drain")
-                    floor = max(floor, assigned[id(v)] + 1)
+                    bump(assigned[id(v)] + 1, f"dep:#{v.index}")
                 else:                           # read-after-write
-                    floor = max(floor,
-                                last_writer.get(id(v), -1) + 1)
+                    bump(last_writer.get(id(v), -1) + 1,
+                         f"read-after-write:{nm}")
             if t.out is not None:
                 # never share an epoch with another writer of the same
                 # destination, nor with anyone still reading its old value
-                floor = max(floor, last_writer.get(id(t.out), -1) + 1,
-                            last_reader.get(id(t.out), -1) + 1)
+                bump(last_writer.get(id(t.out), -1) + 1, "write-conflict")
+                bump(last_reader.get(id(t.out), -1) + 1, "write-conflict")
             e = floor
             while e < len(epochs) and ((epoch_resources[e] & fp)
                                        or epoch_keys[e] != key):
+                why.append("bank-conflict" if (epoch_resources[e] & fp)
+                           else "stack-shape")
                 e += 1
+            t.deferred = why
             if e == len(epochs):
                 epochs.append(EpochReport())
                 epoch_resources.append(set())
@@ -412,7 +434,58 @@ class AsyncScheduler:
         report.stats = total
         self.last_drain = report
         self.drains += 1
+        m = self.store.metrics
+        m.counter("sched_drains").inc(1)
+        m.counter("sched_epochs").inc(len(epochs))
+        m.counter("sched_queries").inc(len(tickets))
+        for t in tickets:
+            for r in t.deferred:
+                # label by reason class, not instance ("dep:#7" -> "dep")
+                m.counter("sched_deferrals").inc(1, reason=r.split(":")[0])
+        if self.store.tracer.enabled:
+            self._trace_drain(report, by_index)
         return tickets
+
+    def _trace_drain(self, report: DrainReport,
+                     by_index: Dict[int, Ticket]) -> None:
+        """Lay the drain on the trace: one span per epoch on the
+        scheduler track (span durations tile [start_ns, end_ns) exactly -
+        the sum-reconciliation contract tests/CI check), per-(device,
+        bank) occupancy spans stacked in ticket order after the epoch's
+        serialized channel time, a channel span when transfers happened,
+        and one async span per ticket from submit to finish (defer
+        reasons ride in its args)."""
+        tr = self.store.tracer
+        for k, erep in enumerate(report.epochs):
+            tr.span(("scheduler",), f"epoch{k}", "epoch", erep.start_ns,
+                    erep.end_ns - erep.start_ns,
+                    args={"tickets": list(erep.tickets),
+                          "measured_ns": erep.ns,
+                          "channel_ns": erep.channel_ns})
+            if erep.channel_ns:
+                tr.span(("channel",), f"epoch{k}", "channel",
+                        erep.start_ns, erep.channel_ns)
+            offsets: Dict[Resource, float] = {}
+            for ti in erep.tickets:
+                t = by_index[ti]
+                for r in sorted(t.resource_ns):
+                    d, b = r
+                    off = offsets.get(r, 0.0)
+                    tr.span((f"device{d}", f"bank{b}"), f"q#{t.index}",
+                            "bank",
+                            erep.start_ns + erep.channel_ns + off,
+                            t.resource_ns[r],
+                            args={"ticket": t.index, "epoch": k})
+                    offsets[r] = off + t.resource_ns[r]
+        for ti in sorted(by_index):
+            t = by_index[ti]
+            tr.async_begin(("scheduler", "tickets"), f"q#{t.index}",
+                           "ticket", t.index, t.submitted_ns,
+                           args={"epoch": t.epoch,
+                                 "deferred": list(t.deferred),
+                                 "started_ns": t.started_ns})
+            tr.async_end(("scheduler", "tickets"), f"q#{t.index}",
+                         "ticket", t.index, t.finished_ns)
 
     def _execute(self, t: Ticket) -> None:
         """Run one query through the planner (fault-ins charged to its

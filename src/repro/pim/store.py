@@ -43,6 +43,7 @@ import numpy as np
 from ..core.bitvector import BitVector, _mask_tail
 from ..core.engine import _to_u64
 from ..core.simulator import AmbitDevice, AmbitError
+from ..obs import NULL_TRACER, MetricsRegistry
 from .allocator import RowAllocator, Slot, STRIPED
 
 
@@ -147,10 +148,21 @@ class LruSpillBase:
     / ``_owner_of``."""
 
     _handle_desc = "resident bitvector"
+    _obs_name = "store"
 
     def _lru_init(self) -> None:
         self.evicted_clean = 0
         self.evicted_dirty = 0
+        # Observability (src/repro/obs): metrics are always on - every
+        # channel transfer is charged through ``_charge_io`` so the
+        # registry reconciles bit-exactly with the legacy byte counters;
+        # the tracer defaults to the disabled NULL_TRACER (the runtime
+        # swaps in live instances).
+        self.metrics = MetricsRegistry()
+        self.tracer = NULL_TRACER
+        # Set by ``spill`` around the dirty read-back so _charge_io can
+        # attribute those bytes to cause="spill" instead of "read_back".
+        self._io_cause: Optional[str] = None
         self._lru: "OrderedDict[int, object]" = OrderedDict()
         # Hold refcounts: handles queued in an AsyncScheduler but not yet
         # executed must survive until their query runs - they are skipped
@@ -165,6 +177,32 @@ class LruSpillBase:
         self.pinned_bytes = 0
         self.pin_budget_bytes: Optional[int] = None
         self._pin_billed: set = set()
+
+    def _charge_io(self, direction: str, cause: str, nbytes: int) -> None:
+        """THE accounting site for host<->device channel transfers.
+
+        Every byte that crosses the channel is billed here exactly once:
+        the legacy per-store counters, the MetricsRegistry series
+        (``store_io_bytes``/``store_io_ops`` labeled by direction and
+        cause: upload / fault_in / spill / read_back), and - when
+        tracing - a store-track instant all update together, which is
+        what keeps the registry bit-exactly reconciled with the legacy
+        ledgers. ``direction`` is "to_device" or "from_device".
+        PimCluster extends this to bill its ChannelLedger too."""
+        if direction == "to_device":
+            self.host_writes += 1
+            self.bytes_to_device += nbytes
+        else:
+            self.host_reads += 1
+            self.bytes_from_device += nbytes
+        self.metrics.counter("store_io_bytes").inc(
+            nbytes, direction=direction, cause=cause)
+        self.metrics.counter("store_io_ops").inc(
+            1, direction=direction, cause=cause)
+        if self.tracer.enabled:
+            self.tracer.instant(
+                (self._obs_name, "io"), cause, "store",
+                args={"direction": direction, "bytes": int(nbytes)})
 
     def pin(self, rbv) -> None:
         """Exempt a handle from eviction, charging its bytes against the
@@ -234,7 +272,11 @@ class LruSpillBase:
             raise AmbitError(
                 f"cannot spill {rbv!r}: a queued query still reads it")
         if rbv.dirty or rbv._host is None:
-            self._read_back(rbv)
+            self._io_cause = "spill"
+            try:
+                self._read_back(rbv)
+            finally:
+                self._io_cause = None
             self.evicted_dirty += 1
         else:
             self.evicted_clean += 1
@@ -470,8 +512,7 @@ class PimStore(LruSpillBase):
             words32=data32.shape[-1],
             chunks=len(chunks) // max(1, int(np.prod(data32.shape[:-1]))),
             slots=slots, dirty=False, name=name, _host=bv)
-        self.host_writes += 1
-        self.bytes_to_device += rbv.device_bytes
+        self._charge_io("to_device", "upload", rbv.device_bytes)
         self._register(rbv)
         if pin:
             try:
@@ -487,8 +528,8 @@ class PimStore(LruSpillBase):
                             rbv)
         rbv._host = out
         rbv.dirty = False
-        self.host_reads += 1
-        self.bytes_from_device += rbv.device_bytes
+        self._charge_io("from_device", self._io_cause or "read_back",
+                        rbv.device_bytes)
         return out
 
     def ensure_resident(self, rbv: ResidentBitVector,
@@ -506,8 +547,7 @@ class PimStore(LruSpillBase):
         rbv.slots = slots
         rbv.spilled = False
         rbv.dirty = False
-        self.host_writes += 1
-        self.bytes_to_device += rbv.device_bytes
+        self._charge_io("to_device", "fault_in", rbv.device_bytes)
         self._register(rbv)
         return rbv
 
@@ -560,4 +600,6 @@ class PimStore(LruSpillBase):
             rbv.slots[i] = new_slot
             moved += 1
         self.migrated_rows += moved
+        if moved:
+            self.metrics.counter("migrated_rows").inc(moved)
         return moved

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..models.model import Model
+from ..obs import MetricsRegistry
 
 
 @dataclasses.dataclass
@@ -40,7 +41,8 @@ class Request:
 class ServeEngine:
     def __init__(self, model: Model, params, max_seq: int,
                  batch_slots: int = 8, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0,
+                 metrics: Optional[MetricsRegistry] = None):
         self.model = model
         self.params = params
         self.max_seq = max_seq
@@ -48,6 +50,7 @@ class ServeEngine:
         self.temperature = temperature
         self.key = jax.random.PRNGKey(seed)
         self.decode_steps = 0       # decode iterations actually executed
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
         self._prefill = jax.jit(
             lambda p, b: model.prefill(p, b, skv=max_seq))
         self._decode = jax.jit(model.decode_step)
@@ -90,11 +93,16 @@ class ServeEngine:
             if r.eos_id is not None and t == r.eos_id:
                 done[i] = True
                 r.done = True
+                self.metrics.counter("serve_requests_completed").inc(
+                    1, reason="eos")
                 continue
             r.out.append(t)
+            self.metrics.counter("serve_tokens_sampled").inc(1)
             if len(r.out) >= r.max_new_tokens:
                 done[i] = True
                 r.done = True
+                self.metrics.counter("serve_requests_completed").inc(
+                    1, reason="max_new_tokens")
 
     def _generate_batch(self, reqs: List[Request]) -> None:
         b = self.slots
@@ -104,6 +112,8 @@ class ServeEngine:
             toks[i, plen - len(r.prompt):] = r.prompt  # left-pad
         batch = {"tokens": jnp.asarray(toks)}
         logits, caches = self._prefill(self.params, batch)
+        self.metrics.counter("serve_prefill_batches").inc(1)
+        self.metrics.counter("serve_prefill_tokens").inc(len(reqs) * plen)
         pos = jnp.full((b,), plen, jnp.int32)
         tok = self._sample(logits)
         max_new = max(r.max_new_tokens for r in reqs)
@@ -117,8 +127,12 @@ class ServeEngine:
                 self.params, caches,
                 {"tokens": tok[:, None], "pos": pos})
             self.decode_steps += 1
+            self.metrics.counter("serve_decode_steps").inc(1)
             tok = self._sample(logits)
             pos = pos + 1
             self._record(reqs, tok, done)
         for r in reqs:
+            if not r.done:      # decode loop exhausted max_seq first
+                self.metrics.counter("serve_requests_completed").inc(
+                    1, reason="truncated")
             r.done = True

@@ -40,6 +40,7 @@ from typing import Callable, Dict, Iterable, List, Optional, Tuple
 from ..core import expr as E
 from ..core.engine import OpStats
 from ..core.simulator import AmbitError
+from ..obs import NULL_TRACER, MetricsRegistry
 from ..pim.scheduler import EpochReport, Ticket
 
 
@@ -174,8 +175,14 @@ class QueryFrontend:
         self.completed: List[QueryRecord] = []
         self._inflight: Dict[str, int] = {}
         self._tenant_pinned: Dict[str, int] = {}
-        self._latencies: List[float] = []
         self.report_counters = ServingReport()
+        # Observability: share the runtime's registry/tracer so serving
+        # series (admissions, quota skips, the latency histogram that
+        # p50/p99 are views over) land next to the store/scheduler ones.
+        self.metrics = getattr(runtime, "metrics", None)
+        if self.metrics is None:
+            self.metrics = MetricsRegistry()
+        self.tracer = getattr(runtime, "tracer", NULL_TRACER)
 
     # -- quotas / pinned working sets -----------------------------------------
 
@@ -234,6 +241,11 @@ class QueryFrontend:
         if self._first_arrival_ns is None:
             self._first_arrival_ns = q.arrival_ns
         self.backlog.append(q)
+        self.metrics.counter("serve_submitted").inc(1, tenant=tenant)
+        if self.tracer.enabled:
+            self.tracer.instant(("frontend",), "arrive", "serve",
+                                ts_ns=q.arrival_ns,
+                                args={"tenant": tenant, "seq": q.seq})
         self._pump()
         return q
 
@@ -287,17 +299,31 @@ class QueryFrontend:
             q = self.backlog.popleft()
             if self.inflight(q.tenant) >= self.quota(q.tenant).max_inflight:
                 keep.append(q)          # over quota: skip, don't block
+                self.metrics.counter("serve_quota_skips").inc(
+                    1, tenant=q.tenant)
+                if self.tracer.enabled:
+                    self.tracer.instant(("frontend",), "quota_skip",
+                                        "serve", ts_ns=self.clock_ns,
+                                        args={"tenant": q.tenant,
+                                              "seq": q.seq})
                 continue
             q.ticket = self.runtime.submit(q.expression, q.env,
                                            now_ns=self.clock_ns)
             q.admitted_ns = self.clock_ns
             self._inflight[q.tenant] = self.inflight(q.tenant) + 1
             self.window.append(q)
+            self.metrics.counter("serve_admitted").inc(1, tenant=q.tenant)
+            if self.tracer.enabled:
+                self.tracer.instant(("frontend",), "admit", "serve",
+                                    ts_ns=self.clock_ns,
+                                    args={"tenant": q.tenant,
+                                          "seq": q.seq})
         keep.extend(self.backlog)
         self.backlog = keep
 
     def _drain(self, reason: str) -> None:
         group, self.window = self.window, []
+        start_ns = self.clock_ns
         self.runtime.drain(now_ns=self.clock_ns,
                            epoch_cost=self._epoch_cost)
         rep = self.runtime.last_drain
@@ -312,13 +338,24 @@ class QueryFrontend:
         else:
             rc.flush_drains += 1
         rc.stats += rep.stats
+        lat_hist = self.metrics.histogram("serve_latency_ns")
+        queue_hist = self.metrics.histogram("serve_queue_ns")
         for q in group:
             q.finished_ns = q.ticket.finished_ns
             q.result = q.ticket.result
             self._inflight[q.tenant] = max(0, self.inflight(q.tenant) - 1)
-            self._latencies.append(q.latency_ns)
+            lat_hist.observe(q.latency_ns)
+            queue_hist.observe(q.queue_ns)
+            self.metrics.counter("serve_completed").inc(1, tenant=q.tenant)
             self.completed.append(q)
         rc.completed += len(group)
+        self.metrics.counter("serve_drains").inc(1, reason=reason)
+        self.metrics.counter("serve_batched_queries").inc(len(group))
+        if self.tracer.enabled:
+            self.tracer.span(("frontend",), f"drain:{reason}", "serve",
+                             start_ns, rep.end_ns - start_ns,
+                             args={"queries": len(group),
+                                   "epochs": len(rep.epochs)})
 
     # -- metrics ---------------------------------------------------------------
 
@@ -328,7 +365,10 @@ class QueryFrontend:
         rc = self.report_counters
         out = dataclasses.replace(rc, stats=OpStats())
         out.stats += rc.stats
-        lat = sorted(self._latencies)
+        # p50/p99 are *views* over the shared registry's latency
+        # histogram; with 0 completions everything degrades to 0.0 (and
+        # the snapshot reports None, never NaN) - see metrics_snapshot().
+        lat = sorted(self.metrics.histogram("serve_latency_ns").values())
         out.p50_ns = _nearest_rank(lat, 0.50)
         out.p99_ns = _nearest_rank(lat, 0.99)
         out.mean_ns = sum(lat) / len(lat) if lat else 0.0
@@ -338,6 +378,27 @@ class QueryFrontend:
         out.qps = (out.completed / out.span_ns * 1e9
                    if out.span_ns > 0 else 0.0)
         return out
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """JSON-safe snapshot of the shared registry plus the derived
+        serving view. Percentiles over 0 completions are ``None`` (JSON
+        null) - never NaN, never an exception - so downstream tooling can
+        serialize with ``allow_nan=False``."""
+        lat = self.metrics.histogram("serve_latency_ns")
+        rep = self.report()
+        snap = self.metrics.snapshot()
+        snap["serving"] = {
+            "completed": rep.completed,
+            "drains": rep.drains,
+            "epochs": rep.epochs,
+            "span_ns": rep.span_ns,
+            "qps": rep.qps,
+            "p50_ns": lat.percentile(0.50),
+            "p99_ns": lat.percentile(0.99),
+            "mean_ns": rep.mean_ns if lat.count() else None,
+            "max_ns": rep.max_ns if lat.count() else None,
+        }
+        return snap
 
 
 def run_closed_loop(frontend: QueryFrontend, tenants: List[str],

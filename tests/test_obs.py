@@ -1,0 +1,288 @@
+"""Observability layer: simulated-clock tracing + metrics registry.
+
+The contracts under test (ISSUE 7):
+
+  * **Determinism** - the same workload traced twice produces
+    byte-identical Chrome/Perfetto JSON (CI diffs trace files);
+  * **Zero overhead off** - with tracing disabled the tracer records
+    nothing AND every legacy ledger (OpStats, store byte counters,
+    ChannelLedger) is bit-identical to the traced run: tracing may only
+    observe, never perturb;
+  * **Reconciliation** - MetricsRegistry series are incremented at the
+    same call sites as the legacy ledgers, so their totals match
+    bit-exactly (store io bytes vs bytes_to/from_device, cluster channel
+    ns vs ChannelLedger.host_ns), with tracing on and off;
+  * **Sum reconcile** - the scheduler's epoch spans tile the drain's
+    [start_ns, end_ns) exactly: consecutive, gapless, durations summing
+    to the drain wall time;
+  * **Exporter validity** - chrome_trace output is structurally valid
+    trace-event JSON (pids/tids consistent with metadata, ts/dur
+    microseconds with exact ns in args) and serialises with
+    ``allow_nan=False``.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import BitVector, DRAMGeometry, Expr
+from repro.obs import (NULL_TRACER, MetricsRegistry, Tracer, chrome_trace,
+                       utilization_report, write_chrome_trace)
+from repro.pim import AmbitRuntime
+
+GEOM = DRAMGeometry(rows_per_subarray=32)
+
+X, Y = Expr.var("x"), Expr.var("y")
+
+
+def _rt(tracer=None, **kw):
+    kw.setdefault("banks", 2)
+    kw.setdefault("subarrays", 2)
+    kw.setdefault("words", 2)
+    kw.setdefault("seed", 3)
+    return AmbitRuntime(GEOM, tracer=tracer, **kw)
+
+
+def _drain_workload(rt, n_queries=6, n_bits=120, seed=0):
+    """Submit a small mixed batch and drain it on the simulated clock."""
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (4, n_bits)).astype(bool)
+    hs = [rt.put(BitVector.from_bits(b), name=f"v{i}")
+          for i, b in enumerate(bits)]
+    exprs = [X & Y, X | Y, X ^ Y]
+    for k in range(n_queries):
+        e = exprs[k % len(exprs)]
+        env = {"x": hs[k % 4], "y": hs[(k + 1) % 4]}
+        rt.submit(e, env, now_ns=float(100 * k))
+    rt.drain(now_ns=1_000.0)
+    return rt.last_drain
+
+
+# -- tracer primitives ---------------------------------------------------------
+
+
+def test_disabled_tracer_records_nothing():
+    tr = Tracer(enabled=False)
+    tr.span(("a",), "s", "c", 0.0, 5.0)
+    tr.instant(("a",), "i", "c")
+    tr.tick(("a",), "t", "c", 3.0)
+    tr.async_begin(("a",), "q", "c", 1, 0.0)
+    tr.async_end(("a",), "q", "c", 1, 2.0)
+    tr.advance(("a",), 10.0)
+    assert len(tr) == 0
+    assert tr.cursor(("a",)) == 0.0
+    assert NULL_TRACER.enabled is False
+
+
+def test_tick_advances_per_track_cursor():
+    tr = Tracer()
+    tr.tick(("bank", "0"), "op", "c", 10.0)
+    tr.tick(("bank", "0"), "op", "c", 5.0)
+    tr.tick(("bank", "1"), "op", "c", 7.0)
+    assert tr.cursor(("bank", "0")) == 15.0
+    assert tr.cursor(("bank", "1")) == 7.0
+    s0 = [s for s in tr.spans() if s.track == ("bank", "0")]
+    assert [(s.ts_ns, s.dur_ns) for s in s0] == [(0.0, 10.0), (10.0, 5.0)]
+
+
+def test_instant_sequence_position_is_per_track():
+    tr = Tracer()
+    tr.instant(("a",), "x", "c")
+    tr.instant(("a",), "y", "c")
+    tr.instant(("b",), "z", "c")
+    ts = [e.ts_ns for e in tr.events]
+    assert ts[0] < ts[1]            # call order on track a
+    assert tr.events[2].track == ("b",)
+
+
+# -- metrics primitives --------------------------------------------------------
+
+
+def test_counter_labels_canonical_order():
+    m = MetricsRegistry()
+    m.counter("c").inc(1, a="1", b="2")
+    m.counter("c").inc(2, b="2", a="1")      # kwarg order must not matter
+    assert m.counter("c").value(a="1", b="2") == 3
+    assert m.counter("c").total() == 3
+
+
+def test_histogram_percentile_edge_cases():
+    h = MetricsRegistry().histogram("h")
+    assert h.percentile(0.50) is None        # empty: None, never NaN
+    assert h.percentile(0.99) is None
+    h.observe(42.0)
+    assert h.percentile(0.50) == 42.0        # single sample is every pct
+    assert h.percentile(0.99) == 42.0
+    h.observe(10.0)
+    h.observe(20.0)
+    assert h.percentile(0.50) == 20.0        # nearest-rank over [10,20,42]
+
+
+def test_snapshot_is_json_safe_with_empty_histograms():
+    m = MetricsRegistry()
+    m.counter("c").inc(1, k="v")
+    m.gauge("g").set(2.5)
+    m.histogram("h")                         # registered, never observed
+    snap = m.snapshot()
+    json.dumps(snap, allow_nan=False)        # must not raise
+    assert snap["counters"]["c{k=v}"] == 1
+
+
+# -- reconciliation: registry vs legacy ledgers --------------------------------
+
+
+@pytest.mark.parametrize("traced", [False, True])
+def test_store_io_metrics_match_legacy_counters(traced):
+    rt = _rt(tracer=Tracer() if traced else None)
+    _drain_workload(rt)
+    rt.get(rt.put(BitVector.from_bits(
+        np.ones(64, bool)), name="rb"))      # force a read_back
+    io = rt.metrics.counter("store_io_bytes")
+    to_dev = sum(v for k, v in io.series.items()
+                 if ("direction", "to_device") in k)
+    from_dev = sum(v for k, v in io.series.items()
+                   if ("direction", "from_device") in k)
+    assert to_dev == rt.store.bytes_to_device
+    assert from_dev == rt.store.bytes_from_device
+    ops = rt.metrics.counter("store_io_ops")
+    assert sum(v for k, v in ops.series.items()
+               if ("direction", "to_device") in k) == rt.store.host_writes
+    assert sum(v for k, v in ops.series.items()
+               if ("direction", "from_device") in k) == rt.store.host_reads
+
+
+@pytest.mark.parametrize("traced", [False, True])
+def test_cluster_channel_metrics_match_ledger(traced):
+    rt = _rt(tracer=Tracer() if traced else None, devices=2)
+    _drain_workload(rt)
+    led = rt.store.ledger
+    io = rt.metrics.counter("store_io_bytes")
+    to_dev = sum(v for k, v in io.series.items()
+                 if ("direction", "to_device") in k)
+    from_dev = sum(v for k, v in io.series.items()
+                   if ("direction", "from_device") in k)
+    assert to_dev == led.host_to_device_bytes
+    assert from_dev == led.device_to_host_bytes
+    assert rt.metrics.counter("host_channel_ns").total() == led.host_ns
+
+
+def test_runtime_stats_metrics_match_opstats():
+    rt = _rt()
+    _drain_workload(rt)
+    st = rt.session_stats
+    m = rt.metrics
+    assert m.counter("runtime_ns").total() == st.ns
+    assert m.counter("runtime_energy_nj").total() == st.energy_nj
+    assert m.counter("runtime_aaps").total() == st.aap_count
+
+
+def test_tracing_does_not_perturb_ledgers():
+    """Bit-identical OpStats + store counters with tracing on vs off -
+    the zero-overhead-when-disabled AND observe-only-when-enabled
+    contract in one assertion."""
+    plain, traced = _rt(), _rt(tracer=Tracer())
+    rep_p = _drain_workload(plain)
+    rep_t = _drain_workload(traced)
+    assert plain.tracer is NULL_TRACER and len(plain.tracer) == 0
+    assert len(traced.tracer) > 0
+    for f in ("ns", "energy_nj", "aap_count", "bytes_touched"):
+        assert getattr(rep_p.stats, f) == getattr(rep_t.stats, f)
+    assert plain.store.bytes_to_device == traced.store.bytes_to_device
+    assert plain.store.bytes_from_device == traced.store.bytes_from_device
+    assert plain.metrics.snapshot() == traced.metrics.snapshot()
+
+
+# -- epoch spans reconcile with the drain timeline -----------------------------
+
+
+def test_epoch_spans_tile_drain_wall():
+    rt = _rt(tracer=Tracer())
+    rep = _drain_workload(rt)
+    spans = [e for e in rt.tracer.spans(cat="epoch")]
+    assert len(spans) == len(rep.epochs)
+    assert spans[0].ts_ns == rep.start_ns
+    clock = rep.start_ns
+    for s, erep in zip(spans, rep.epochs):
+        assert s.ts_ns == clock                 # gapless, consecutive
+        assert s.dur_ns == erep.end_ns - erep.start_ns
+        clock = s.ts_ns + s.dur_ns
+    assert clock == rep.end_ns                  # durations sum to wall
+    assert sum(s.dur_ns for s in spans) == rep.wall_ns
+
+
+def test_ticket_lifecycle_and_defer_reasons_traced():
+    rt = _rt(tracer=Tracer())
+    # two queries on the same operands: write conflict or bank overlap
+    # forces at least one deferral with a recorded reason
+    rng = np.random.default_rng(0)
+    h = rt.put(BitVector.from_bits(rng.integers(0, 2, 64).astype(bool)),
+               name="h")
+    t0 = rt.submit(X & Y, {"x": h, "y": h}, now_ns=0.0)
+    t1 = rt.submit(X | Y, {"x": h, "y": h}, now_ns=0.0)
+    rt.drain(now_ns=0.0)
+    begins = [e for e in rt.tracer.events if e.kind == "b"]
+    ends = [e for e in rt.tracer.events if e.kind == "e"]
+    assert len(begins) == 2 and len(ends) == 2
+    assert t1.epoch > t0.epoch
+    assert t1.deferred                          # why it waited
+    assert rt.metrics.counter("sched_deferrals").total() >= 1
+
+
+# -- exporters -----------------------------------------------------------------
+
+
+def test_chrome_trace_structure_and_determinism(tmp_path):
+    def run():
+        rt = _rt(tracer=Tracer())
+        _drain_workload(rt)
+        return rt.tracer
+
+    tr1, tr2 = run(), run()
+    doc = chrome_trace(tr1)
+    events = doc["traceEvents"]
+    meta = [e for e in events if e["ph"] == "M"]
+    body = [e for e in events if e["ph"] != "M"]
+    assert body, "trace must contain non-metadata events"
+    named = {(e["pid"], e["tid"]) for e in meta if e["name"] == "thread_name"}
+    for e in body:
+        assert (e["pid"], e["tid"]) in named
+        assert e["args"]["ns"] == pytest.approx(e["ts"] * 1000.0)
+        if e["ph"] == "X":
+            assert "dur_ns" in e["args"]
+
+    p1, p2 = tmp_path / "a.json", tmp_path / "b.json"
+    write_chrome_trace(tr1, str(p1))
+    write_chrome_trace(tr2, str(p2))
+    assert p1.read_bytes() == p2.read_bytes()   # byte-identical traces
+    json.loads(p1.read_text())                  # and valid JSON
+
+
+def test_utilization_report_sections():
+    rt = _rt(tracer=Tracer())
+    rep = _drain_workload(rt)
+    txt = utilization_report(tracer=rt.tracer, registry=rt.metrics,
+                             drain=rep, max_batch=4)
+    assert "== drain ==" in txt
+    assert "packing_efficiency=" in txt
+    assert "== per-bank busy ==" in txt
+    assert "== bytes by cause ==" in txt
+    assert "== trace ==" in txt
+
+
+def test_trace_report_cli_roundtrip(tmp_path):
+    import pathlib
+    import subprocess
+    import sys
+    repo = pathlib.Path(__file__).resolve().parents[1]
+    rt = _rt(tracer=Tracer())
+    _drain_workload(rt)
+    p = tmp_path / "t.json"
+    write_chrome_trace(rt.tracer, str(p))
+    out = subprocess.run(
+        [sys.executable, str(repo / "tools" / "trace_report.py"),
+         str(p), "--json"],
+        capture_output=True, text=True, check=True)
+    summary = json.loads(out.stdout)
+    assert summary["epochs"]["count"] == len(rt.last_drain.epochs)
+    assert summary["epochs"]["wall_ns"] == rt.last_drain.wall_ns

@@ -440,3 +440,82 @@ def test_closed_loop_completes_and_orders_per_tenant():
         assert seqs == sorted(seqs)
     rep = fe.report()
     assert rep.completed == 23 and rep.qps > 0 and rep.span_ns > 0
+
+
+# -- report percentile edge cases + metrics snapshot (ISSUE 7) ----------------
+
+
+def test_report_on_zero_completions_is_nan_free():
+    """p50/p99 over an empty completion set must not raise or emit NaN:
+    report() degrades to 0.0 and metrics_snapshot() reports None (JSON
+    null), serialisable with allow_nan=False."""
+    import json
+
+    fe = QueryFrontend(_rt())
+    rep = fe.report()
+    assert rep.completed == 0
+    assert rep.p50_ns == 0.0 and rep.p99_ns == 0.0
+    assert rep.mean_ns == 0.0 and rep.max_ns == 0.0 and rep.qps == 0.0
+    snap = fe.metrics_snapshot()
+    json.dumps(snap, allow_nan=False)   # must not raise
+    assert snap["serving"]["p50_ns"] is None
+    assert snap["serving"]["p99_ns"] is None
+
+
+def test_report_on_single_completion():
+    """One completion: every percentile is that query's latency."""
+    rng = np.random.default_rng(0)
+    rt = _rt()
+    _, hs = _operands(rt, rng)
+    fe = QueryFrontend(rt, window_ns=1e9, max_batch=8)
+    q = fe.submit("t0", X & Y, {"x": hs[0], "y": hs[1]})
+    fe.flush()
+    rep = fe.report()
+    assert rep.completed == 1
+    assert rep.p50_ns == rep.p99_ns == rep.mean_ns == rep.max_ns \
+        == q.latency_ns > 0
+    snap = fe.metrics_snapshot()
+    assert snap["serving"]["p50_ns"] == q.latency_ns
+    assert snap["serving"]["p99_ns"] == q.latency_ns
+
+
+def test_frontend_metrics_reconcile_with_report():
+    """The registry's serving series are the same numbers report()
+    derives - the legacy counters are views over the histogram."""
+    rng = np.random.default_rng(1)
+    rt = _rt()
+    _, hs = _operands(rt, rng)
+    fe = QueryFrontend(rt, window_ns=2000.0, max_batch=4)
+
+    def next_query(tenant, k):
+        i = (hash(tenant) + k) % 3
+        return EXPRS[i], {"x": hs[i], "y": hs[i + 1]}
+
+    run_closed_loop(fe, [f"t{i}" for i in range(4)], next_query, 17,
+                    on_complete=lambda q: rt.free(q.result))
+    rep = fe.report()
+    m = fe.metrics
+    assert m is rt.metrics              # shared registry, one namespace
+    lat = m.histogram("serve_latency_ns")
+    assert lat.count() == rep.completed
+    assert m.counter("serve_completed").total() == rep.completed
+    assert m.counter("serve_drains").total() == rep.drains
+    assert m.counter("serve_admitted").total() == rep.completed
+    assert lat.percentile(0.50) == rep.p50_ns
+    assert lat.percentile(0.99) == rep.p99_ns
+
+
+def test_serve_engine_metrics_counters():
+    eng = _engine(batch_slots=2)
+    reqs = [Request(prompt=np.array([5], np.int32), max_new_tokens=8,
+                    eos_id=7),
+            Request(prompt=np.array([1], np.int32), max_new_tokens=4)]
+    eng.generate(reqs)
+    m = eng.metrics
+    assert m.counter("serve_prefill_batches").total() == 1
+    assert m.counter("serve_decode_steps").total() == eng.decode_steps
+    assert m.counter("serve_tokens_sampled").total() == \
+        sum(len(r.out) for r in reqs)
+    assert m.counter("serve_requests_completed").value(reason="eos") == 1
+    assert m.counter("serve_requests_completed").value(
+        reason="max_new_tokens") == 1

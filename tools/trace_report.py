@@ -1,0 +1,144 @@
+"""Summarise a Chrome/Perfetto trace JSON written by the obs layer.
+
+Reads the deterministic trace-event file that ``write_chrome_trace``
+emits (``benchmarks/run.py --trace``, ``serve_closed_loop.py --trace``)
+and prints a utilization report reconstructed *from the file alone* -
+no live Tracer/registry needed, so this works on CI artifacts:
+
+  * epoch timeline: span count, wall ns (epochs tile the drain timeline,
+    so wall = sum of epoch ``dur_ns``), queries per epoch and packing
+    efficiency (``--max-batch``);
+  * per-bank busy: busy ns / busy%% per ``deviceN/bankM`` track from the
+    ``bank``-category spans;
+  * channel vs compute overlap from the ``channel``-category spans;
+  * event counts per category.
+
+``--json`` emits the same summary as a machine-readable dict (sorted
+keys), for diffing across runs.
+
+Usage:  python tools/trace_report.py TRACE.json [--max-batch N] [--json]
+"""
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+
+def load_trace(path):
+    with open(path) as f:
+        doc = json.load(f)
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        raise SystemExit(f"{path}: not a trace-event file "
+                         "(missing traceEvents list)")
+    return events
+
+
+def summarise(events, max_batch=None):
+    # Reconstruct thread (track) names from the metadata events.
+    tnames = {}
+    for e in events:
+        if e.get("ph") == "M" and e.get("name") == "thread_name":
+            tnames[(e["pid"], e["tid"])] = e["args"]["name"]
+
+    cats = defaultdict(int)
+    epoch_spans = []
+    channel_ns = 0.0
+    bank_busy = defaultdict(float)
+    for e in events:
+        ph = e.get("ph")
+        if ph == "M":
+            continue
+        cats[e.get("cat", "?")] += 1
+        if ph != "X":
+            continue
+        args = e.get("args", {})
+        dur = args.get("dur_ns", e.get("dur", 0.0) * 1000.0)
+        cat = e.get("cat")
+        if cat == "epoch":
+            epoch_spans.append((args.get("ns", e.get("ts", 0.0) * 1000.0),
+                                dur, len(args.get("tickets", []))))
+        elif cat == "channel":
+            channel_ns += dur
+        elif cat == "bank":
+            bank_busy[tnames.get((e["pid"], e["tid"]),
+                                 f"pid{e['pid']}/tid{e['tid']}")] += dur
+
+    out = {"event_counts": dict(sorted(cats.items()))}
+    if epoch_spans:
+        wall = sum(d for _, d, _ in epoch_spans)
+        n_q = sum(q for _, _, q in epoch_spans)
+        out["epochs"] = {
+            "count": len(epoch_spans),
+            "queries": n_q,
+            "wall_ns": wall,
+            "queries_per_epoch": n_q / len(epoch_spans),
+        }
+        if max_batch:
+            out["epochs"]["packing_efficiency_pct"] = (
+                100.0 * n_q / (len(epoch_spans) * max_batch))
+        if channel_ns:
+            comp = wall - channel_ns
+            out["epochs"]["channel_ns"] = channel_ns
+            out["epochs"]["channel_share_pct"] = (
+                100.0 * channel_ns / wall if wall else 0.0)
+            out["epochs"]["compute_ns"] = comp
+        if bank_busy:
+            out["banks"] = {
+                name: {"busy_ns": ns,
+                       "busy_pct": 100.0 * ns / wall if wall else 0.0}
+                for name, ns in sorted(bank_busy.items())}
+    elif bank_busy:
+        out["banks"] = {name: {"busy_ns": ns}
+                        for name, ns in sorted(bank_busy.items())}
+    return out
+
+
+def render(summary):
+    lines = []
+    ep = summary.get("epochs")
+    if ep:
+        lines.append("== epochs ==")
+        row = (f"epochs={ep['count']} queries={ep['queries']} "
+               f"wall_ns={ep['wall_ns']:.1f} "
+               f"queries_per_epoch={ep['queries_per_epoch']:.2f}")
+        if "packing_efficiency_pct" in ep:
+            row += f" packing_efficiency={ep['packing_efficiency_pct']:.1f}%"
+        lines.append(row)
+        if "channel_ns" in ep:
+            lines.append(f"channel_ns={ep['channel_ns']:.1f} "
+                         f"compute_ns={ep['compute_ns']:.1f} "
+                         f"channel_share={ep['channel_share_pct']:.1f}%")
+    banks = summary.get("banks")
+    if banks:
+        lines.append("== per-bank busy ==")
+        for name, row in banks.items():
+            s = f"{name} busy_ns={row['busy_ns']:.1f}"
+            if "busy_pct" in row:
+                s += f" busy={row['busy_pct']:.1f}%"
+            lines.append(s)
+    lines.append("== events ==")
+    lines.append(" ".join(f"{c}={n}"
+                          for c, n in summary["event_counts"].items()))
+    return "\n".join(lines)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("trace", help="Chrome trace JSON file")
+    ap.add_argument("--max-batch", type=int, default=None,
+                    help="frontend max_batch, for packing efficiency")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the summary as JSON instead of text")
+    args = ap.parse_args(argv)
+    summary = summarise(load_trace(args.trace), max_batch=args.max_batch)
+    if args.json:
+        json.dump(summary, sys.stdout, sort_keys=True, indent=1)
+        sys.stdout.write("\n")
+    else:
+        print(render(summary))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
