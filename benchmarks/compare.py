@@ -12,15 +12,18 @@ run must not. Two runs are compared on:
     ``...us`` / ``...x`` token and is deliberately ignored.
 
 Usage: ``python -m benchmarks.compare current.json baseline.json``
+``--only PREFIX`` restricts both runs to row names starting with PREFIX
+(so a partial run - e.g. ``--sections refresh`` - can be diffed against
+the full committed baseline without missing-row noise).
 Exit status 1 with a readable diff when the structures diverge.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import re
-import sys
-from typing import Dict
+from typing import Dict, Optional
 
 _INT = re.compile(r"^-?\d+$")
 _TOKEN = re.compile(r"([A-Za-z_][\w.]*)=(\S+)")
@@ -47,8 +50,12 @@ def structural(doc: dict) -> Dict[str, Dict[str, int]]:
     return out
 
 
-def diff(current: dict, baseline: dict) -> list:
+def diff(current: dict, baseline: dict,
+         only: Optional[str] = None) -> list:
     cur, base = structural(current), structural(baseline)
+    if only is not None:
+        cur = {n: t for n, t in cur.items() if n.startswith(only)}
+        base = {n: t for n, t in base.items() if n.startswith(only)}
     problems = []
     for name in sorted(cur):
         for prefix, required in _REQUIRED_TOKENS.items():
@@ -75,21 +82,26 @@ def diff(current: dict, baseline: dict) -> list:
 
 
 def main(argv=None) -> None:
-    argv = sys.argv[1:] if argv is None else argv
-    if len(argv) != 2:
-        raise SystemExit(
-            "usage: python -m benchmarks.compare current.json baseline.json")
-    with open(argv[0]) as fh:
+    ap = argparse.ArgumentParser(
+        description="structural benchmark diff (see module docstring)")
+    ap.add_argument("current", help="run.py --json output to check")
+    ap.add_argument("baseline", help="committed baseline JSON")
+    ap.add_argument("--only", metavar="PREFIX", default=None,
+                    help="compare only row names starting with PREFIX")
+    args = ap.parse_args(argv)
+    with open(args.current) as fh:
         current = json.load(fh)
-    with open(argv[1]) as fh:
+    with open(args.baseline) as fh:
         baseline = json.load(fh)
-    problems = diff(current, baseline)
+    problems = diff(current, baseline, only=args.only)
     if problems:
         for p in problems:
             print(p)
         raise SystemExit(f"{len(problems)} structural difference(s)")
     n = len(structural(current))
-    print(f"OK: {n} benchmark rows structurally identical to baseline")
+    scope = f" (prefix {args.only!r})" if args.only else ""
+    print(f"OK: benchmark rows structurally identical to baseline{scope} "
+          f"({n} rows in current run)")
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   fig23_*   BitWeaving predicate scans  (Section 8.2)
   fig24_*   bitvector set operations    (Section 8.3)
   kern_*    Pallas kernel micro + engine roofline model
+  refresh_* DRAM timing-rule oracle + refresh-interference model
   serve_*   closed-loop multi-tenant serving (continuous batching)
   roofline_* / cell_*  dry-run roofline aggregation (SSRoofline)
 
@@ -32,8 +33,8 @@ import sys
 
 
 def sections(trace_dir=None):
-    from . import (kernels_micro, paper_apps, paper_tables, roofline,
-                   serve_closed_loop)
+    from . import (kernels_micro, paper_apps, paper_tables, refresh,
+                   roofline, serve_closed_loop)
 
     serve = serve_closed_loop.serve_closed_loop
     if trace_dir is not None:
@@ -50,6 +51,7 @@ def sections(trace_dir=None):
         paper_apps.fig23_bitweaving,
         paper_apps.fig24_sets,
         kernels_micro.kernels_micro,
+        refresh.refresh,
         serve,
         roofline.roofline_rows,
     ]

@@ -61,7 +61,14 @@ class OpStats:
     from an analytic formula. ``channel_ns`` is already included in
     ``ns`` (transfers serialize before the device programs run); the
     separate field exists so callers can see how much of the critical
-    path the channel re-introduced."""
+    path the channel re-introduced.
+
+    ``refresh_stolen_ns`` is DRAM refresh time interleaved with this
+    call's bank-busy time (tRFC out of every tREFI, timing.py). It is
+    deliberately NOT folded into ``ns`` - the base ledger stays the
+    refresh-free device cost so results remain comparable across
+    backends; refresh-aware wall clock is opt-in via
+    ``AsyncScheduler.drain(refresh=True)``."""
 
     ns: float = 0.0
     energy_nj: float = 0.0
@@ -69,6 +76,7 @@ class OpStats:
     bytes_touched: int = 0
     channel_ns: float = 0.0
     channel_bytes: int = 0
+    refresh_stolen_ns: float = 0.0
 
     def merge(self, other: "OpStats") -> "OpStats":
         """Accumulate another ledger into this one (all fields - callers
@@ -80,6 +88,7 @@ class OpStats:
         self.bytes_touched += other.bytes_touched
         self.channel_ns += other.channel_ns
         self.channel_bytes += other.channel_bytes
+        self.refresh_stolen_ns += other.refresh_stolen_ns
         return self
 
     def __iadd__(self, other: "OpStats") -> "OpStats":

@@ -39,6 +39,13 @@ class TimingParams:
     # Section 4.3.
     aap_naive_ns: float = 80.0      # 2*tRAS + tRP, paper quotes 80 ns
     aap_overlap_extra_ns: float = 4.0  # back-to-back ACTs cost tRAS + 4 ns
+    # Rank-level four-activate window (DDR3-1600 1KB-page tFAW).
+    tFAW: float = 40.0
+    # Refresh (DDR3 8Gb-class): one all-bank refresh every tREFI, each
+    # stalling the bank for tRFC. Banks lose tRFC out of every tREFI of
+    # wall clock, a steady-state ~4.7% throughput tax.
+    tREFI: float = 7800.0
+    tRFC: float = 350.0
     # Section 7 energy model.
     e_act_nj: float = 3.07           # calibrated base activation energy
     extra_wordline_factor: float = 0.22
@@ -48,6 +55,18 @@ class TimingParams:
     @property
     def ap_ns(self) -> float:
         return self.tRAS + self.tRP  # 50 ns
+
+    @property
+    def refresh_overhead(self) -> float:
+        """Steady-state stolen-time fraction: for every unit of useful busy
+        time the bank also sits through tRFC/(tREFI - tRFC) of refresh."""
+        return self.tRFC / (self.tREFI - self.tRFC)
+
+    def refresh_stolen_ns(self, busy_ns: float) -> float:
+        """Refresh time interleaved with ``busy_ns`` of useful bank work in
+        steady state (amortized model; the event-accurate timeline lives in
+        ``refresh_schedule``)."""
+        return busy_ns * self.refresh_overhead
 
     @property
     def aap_opt_ns(self) -> float:
@@ -64,6 +83,60 @@ class TimingParams:
 
 
 DEFAULT_TIMING = TimingParams()
+
+
+# -- refresh windows ----------------------------------------------------------
+# The k-th refresh window occupies [k*tREFI, k*tREFI + tRFC), k >= 1 (the
+# first refresh falls due one tREFI after the epoch starts). No command may
+# issue inside a window; the two helpers below place work around them.
+
+
+def _next_window(t_ns: float, params: TimingParams):
+    """(start, end) of the first refresh window ending after ``t_ns``."""
+    k = max(1, int(t_ns // params.tREFI))
+    start = k * params.tREFI
+    if t_ns >= start + params.tRFC:
+        start += params.tREFI
+    return start, start + params.tRFC
+
+
+def defer_for_refresh(t_ns: float, dur_ns: float,
+                      params: TimingParams = DEFAULT_TIMING) -> float:
+    """Issue time for an *atomic* burst of ``dur_ns`` wanting to start at
+    ``t_ns``: if the burst would start inside or straddle a refresh window
+    it is deferred until the window closes. Bursts must fit between
+    consecutive windows (every Ambit macro does: <= 85 ns vs 7450 ns)."""
+    if dur_ns > params.tREFI - params.tRFC:
+        raise ValueError(
+            f"atomic burst of {dur_ns} ns cannot fit between refresh "
+            f"windows ({params.tREFI - params.tRFC} ns apart)")
+    while True:
+        start, end = _next_window(t_ns, params)
+        if t_ns + dur_ns <= start or t_ns >= end:
+            return t_ns
+        t_ns = end
+
+
+def refresh_schedule(start_ns: float, work_ns: float,
+                     params: TimingParams = DEFAULT_TIMING):
+    """Lay ``work_ns`` of *pausable* work on the wall clock from
+    ``start_ns``, pausing through every refresh window it crosses.
+    Returns ``(work_start_ns, finish_ns)``; the stolen time is
+    ``finish - work_start - work_ns``."""
+    t = start_ns
+    win_start, win_end = _next_window(t, params)
+    if win_start <= t < win_end:
+        t = win_end
+    work_start = t
+    remaining = work_ns
+    while remaining > 0:
+        win_start, win_end = _next_window(t, params)
+        slice_ns = min(remaining, win_start - t)
+        t += slice_ns
+        remaining -= slice_ns
+        if remaining > 0:
+            t = win_end
+    return work_start, t
 
 
 @dataclasses.dataclass

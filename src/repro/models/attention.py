@@ -202,9 +202,18 @@ def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
     if window is not None:
         mask = mask & (kv_pos[None, :] > (pos[:, None] - window))
     s = jnp.where(mask[:, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    # Mirror flash_attention's accumulation order exactly (unnormalized
+    # exp cast to the cache dtype, f32 PV accumulate, divide by the f32
+    # normalizer last). softmax-then-cast rounds the probabilities in a
+    # different direction than flash's cast-then-normalize; that ~1-ulp
+    # per-layer skew compounds through deep stacks (gemma3's 5:1 pattern
+    # forces 12 reduced layers) into >10% decode-vs-forward logit drift.
+    m = s.max(-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = p.sum(-1)
     o = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
                    preferred_element_type=jnp.float32)
+    o = o / jnp.maximum(l, 1e-20)[..., None]
     return o.reshape(b, 1, hq, d).astype(q.dtype)
 
 

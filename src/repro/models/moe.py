@@ -39,6 +39,7 @@ from jax.sharding import PartitionSpec as P
 from ..configs.base import ArchConfig, MoEConfig
 from .layers import _act, cast
 from .param import ParamDef
+from .sharding_ctx import shard_map
 
 
 def padded_experts(moe: MoEConfig, pad_to: Optional[int] = None) -> int:
@@ -212,14 +213,13 @@ def moe_block(p, x: jnp.ndarray, cfg: ArchConfig,
         fn2 = functools.partial(
             _moe_ep2d, moe=moe, e_pad=e_pad, act=act, capacity=cap, s=s,
             d=d, batch_axes=batch_axes, n_model=n_model, n_data=n_data)
-        out, aux = jax.shard_map(
+        out, aux = shard_map(
             fn2, mesh=mesh,
             in_specs=(P(batch_axes, None, None), P(None, None),
                       P(("data", "model"), None, None),
                       P(("data", "model"), None, None),
                       P(("data", "model"), None, None)),
             out_specs=(P(batch_axes, None, None), P()),
-            check_vma=False,
         )(x, p["router"], p["w1"], p["w3"], p["w2"])
         return out, aux
 
@@ -239,14 +239,13 @@ def moe_block(p, x: jnp.ndarray, cfg: ArchConfig,
             aux = jax.lax.pmean(aux, batch_axes)
         return out.reshape(bl, s, d), aux
 
-    out, aux = jax.shard_map(
+    out, aux = shard_map(
         shard_fn, mesh=mesh,
         in_specs=(P(batch_axes if batch_axes else None, None, None),
                   P(None, None), P("model", None, None),
                   P("model", None, None), P("model", None, None)),
         out_specs=(P(batch_axes if batch_axes else None, None, None),
                    P()),
-        check_vma=False,
     )(x, p["router"], p["w1"], p["w3"], p["w2"])
     return out, aux
 

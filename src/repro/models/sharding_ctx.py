@@ -65,3 +65,16 @@ def hint(x, *axes: Optional[str]):
 def hint_tree(tree, axes_fn):
     """Apply hints across a pytree; axes_fn(leaf) -> logical axes."""
     return jax.tree.map(lambda l: hint(l, *axes_fn(l)), tree)
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` across jax versions: new releases expose it as
+    ``jax.shard_map(..., check_vma=)``, older ones as
+    ``jax.experimental.shard_map.shard_map(..., check_rep=)``. ``check``
+    maps onto whichever replication-check kwarg the version has."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

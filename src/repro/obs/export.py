@@ -114,6 +114,11 @@ def utilization_report(tracer: Optional[Tracer] = None,
             pct = (100.0 * chan / denom) if denom else 0.0
             lines.append(f"channel_ns={chan:.1f} compute_ns={comp:.1f} "
                          f"channel_share={pct:.1f}%")
+            stall = getattr(drain, "refresh_stall_ns", 0.0)
+            if stall:
+                share = 100.0 * stall / wall if wall else 0.0
+                lines.append(f"refresh_stall_ns={stall:.1f} "
+                             f"refresh_share={share:.1f}%")
             if max_batch:
                 eff = 100.0 * n_q / (len(drain.epochs) * max_batch)
                 lines.append(f"packing_efficiency={eff:.1f}% "
@@ -136,6 +141,15 @@ def utilization_report(tracer: Optional[Tracer] = None,
                                  f"busy={100.0 * ns / wall:.1f}%")
                 else:
                     lines.append(f"bank[{label}] busy_ns={ns:.1f}")
+        stolen = registry.counters.get("refresh_stolen_ns")
+        if stolen is not None and stolen.series:
+            # The planner's steady-state refresh tax per bank: tRFC out
+            # of every tREFI interleaved with the busy time above.
+            lines.append("== refresh ==")
+            for key in sorted(stolen.series):
+                ns = stolen.series[key]
+                label = ",".join(f"{k}={v}" for k, v in key)
+                lines.append(f"refresh[{label}] stolen_ns={ns:.1f}")
         io = registry.counters.get("store_io_bytes")
         if io is not None and io.series:
             lines.append("== bytes by cause ==")

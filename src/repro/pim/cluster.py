@@ -763,7 +763,9 @@ class ClusterPlanner:
             aap_count=sum(st.aap_count for st in dev_stats.values()),
             bytes_touched=0,        # resident: no host traffic
             channel_ns=report.transfer_ns,
-            channel_bytes=report.transfer_bytes)
+            channel_bytes=report.transfer_bytes,
+            refresh_stolen_ns=sum(st.refresh_stolen_ns
+                                  for st in dev_stats.values()))
         self.last_report = report
 
         # Per-(device,bank) busy time is the occupancy signal the
@@ -776,6 +778,9 @@ class ClusterPlanner:
             st = report.per_bank[(d, b)]
             if st.ns:
                 m.counter("bank_busy_ns").inc(st.ns, device=d, bank=b)
+            if st.refresh_stolen_ns:
+                m.counter("refresh_stolen_ns").inc(
+                    st.refresh_stolen_ns, device=d, bank=b)
         if cl.tracer.enabled:
             cl.tracer.tick(
                 ("planner", "cluster"), "plan", "plan", report.stats.ns,

@@ -176,16 +176,24 @@ class QueryPlanner:
 
         after = self._bank_totals()
         deltas = {bi: _delta(after[bi], before[bi]) for bi in after}
+        # Refresh interference: every ns of bank-busy time drags
+        # tRFC/(tREFI - tRFC) of refresh along with it (timing.py). This
+        # is THE single site that computes stolen time from busy time, so
+        # the per-bank ledger, the metrics series and the tracer spans
+        # reconcile bit-exactly.
         report.per_bank = {
             bi: OpStats(ns=d.ns, energy_nj=d.energy_nj,
-                        aap_count=d.aap_count)
+                        aap_count=d.aap_count,
+                        refresh_stolen_ns=timing.refresh_stolen_ns(d.ns))
             for bi, d in deltas.items()
             if d.ns > 0.0 or d.energy_nj > 0.0 or d.aap_count}
         report.stats = OpStats(
             ns=max((d.ns for d in deltas.values()), default=0.0),
             energy_nj=sum(d.energy_nj for d in deltas.values()),
             aap_count=sum(d.aap_count for d in deltas.values()),
-            bytes_touched=0)        # resident: no host traffic
+            bytes_touched=0,        # resident: no host traffic
+            refresh_stolen_ns=sum(
+                st.refresh_stolen_ns for st in report.per_bank.values()))
         self.last_report = report
 
         # Observability: per-bank busy ns is the occupancy series the
@@ -202,6 +210,9 @@ class QueryPlanner:
             st = report.per_bank[b]
             if st.ns:
                 m.counter("bank_busy_ns").inc(st.ns, device=0, bank=b)
+            if st.refresh_stolen_ns:
+                m.counter("refresh_stolen_ns").inc(
+                    st.refresh_stolen_ns, device=0, bank=b)
         tr = self.store.tracer
         if tr.enabled:
             tr.tick(("planner", "device0"), "plan", "plan", report.stats.ns,
@@ -209,6 +220,20 @@ class QueryPlanner:
                           "migrated_rows": report.migrated_rows,
                           "staged_rows": report.staged_rows,
                           "aaps": report.stats.aap_count})
+        # Per-bank refresh-stall spans go through the DEVICE tracer: under
+        # a cluster the runtime threads the session tracer + a
+        # ``device<d>`` trace_name onto each AmbitDevice (the per-device
+        # store tracer stays NULL), so these spans are emitted exactly
+        # once per call with the real device track either way.
+        dtr = getattr(dev, "tracer", None)
+        if dtr is not None and dtr.enabled:
+            dev_track = getattr(dev, "trace_name", "device0")
+            for b in sorted(report.per_bank):
+                st = report.per_bank[b]
+                if st.refresh_stolen_ns:
+                    dtr.tick((dev_track, f"bank{b}"), "refresh_stall",
+                             "refresh", st.refresh_stolen_ns,
+                             args={"busy_ns": st.ns})
 
         return self.store.adopt(ResidentBitVector(
             store=self.store, n_bits=first.n_bits, shape=first.shape,

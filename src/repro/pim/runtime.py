@@ -226,16 +226,19 @@ class AmbitRuntime:
         return self.scheduler.submit(expression, env, out=out,
                                      out_name=out_name, now_ns=now_ns)
 
-    def drain(self, now_ns: float = 0.0, epoch_cost=None):
+    def drain(self, now_ns: float = 0.0, epoch_cost=None,
+              refresh: bool = False):
         """Execute every queued query, overlapping bank/device-disjoint
         queries in epochs. Returns the tickets in submit order; the
         drain's combined cost (sum of epoch maxima, summed energy/AAPs,
         fault-in bytes) lands in ``last_stats`` / ``session_stats``.
         ``now_ns``/``epoch_cost`` lay the epochs on a simulated clock
         (per-ticket ``started_ns``/``finished_ns``) for serving
-        frontends - see ``AsyncScheduler.drain``."""
+        frontends; ``refresh=True`` pauses that timeline through DRAM
+        refresh windows - see ``AsyncScheduler.drain``."""
         tickets = self.scheduler.drain(now_ns=now_ns,
-                                       epoch_cost=epoch_cost)
+                                       epoch_cost=epoch_cost,
+                                       refresh=refresh)
         if tickets:
             st = OpStats()
             st += self.scheduler.last_drain.stats

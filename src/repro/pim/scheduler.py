@@ -48,6 +48,7 @@ from typing import Dict, List, Optional, Tuple
 from ..core import expr as E
 from ..core.engine import OpStats
 from ..core.simulator import AmbitError
+from ..core.timing import refresh_schedule
 
 Resource = Tuple[int, int]          # (device index, bank index)
 
@@ -126,6 +127,10 @@ class EpochReport:
     # model when the backend has no DRAM timing (accelerator stores).
     start_ns: float = 0.0
     end_ns: float = 0.0
+    # Refresh stall inside this epoch's [start_ns, end_ns) interval -
+    # nonzero only under ``drain(refresh=True)``, where end - start =
+    # work + refresh_ns (the epoch paused through refresh windows).
+    refresh_ns: float = 0.0
 
 
 @dataclasses.dataclass
@@ -133,13 +138,19 @@ class DrainReport:
     """What one drain did. ``stats.ns`` is the sum of epoch maxima;
     energy/AAPs/bytes are plain sums over the drained tickets (identical
     to serial evaluation by construction). ``serial_ns`` is what the same
-    queries would have reported executed one eval at a time."""
+    queries would have reported executed one eval at a time.
+
+    ``stats.refresh_stolen_ns`` is the tickets' steady-state refresh tax
+    (planner ledger, always on); ``refresh_stall_ns`` is the event-level
+    stall the timeline actually absorbed, nonzero only under
+    ``drain(refresh=True)`` (= sum of epoch ``refresh_ns``)."""
 
     epochs: List[EpochReport] = dataclasses.field(default_factory=list)
     stats: OpStats = dataclasses.field(default_factory=OpStats)
     serial_ns: float = 0.0
     start_ns: float = 0.0           # the drain's ``now_ns``
     end_ns: float = 0.0             # clock after the last epoch
+    refresh_stall_ns: float = 0.0
 
     @property
     def n_queries(self) -> int:
@@ -163,6 +174,15 @@ class AsyncScheduler:
         self.drains = 0
         self.last_drain: Optional[DrainReport] = None
         self._submitted = 0
+        # DRAM timing of the backing device(s): drives the refresh-aware
+        # drain timeline. None on accelerator stores (no DRAM model - a
+        # ``refresh=True`` drain degrades to the plain timeline there).
+        dev = getattr(store, "device", None)
+        if dev is not None and hasattr(dev, "timing"):
+            self._timing = dev.timing
+        else:
+            devs = getattr(store, "devices", None) or ()
+            self._timing = devs[0].timing if len(devs) else None
 
     # -- submission ----------------------------------------------------------
 
@@ -350,7 +370,8 @@ class AsyncScheduler:
 
     # -- execution ------------------------------------------------------------
 
-    def drain(self, now_ns: float = 0.0, epoch_cost=None) -> List[Ticket]:
+    def drain(self, now_ns: float = 0.0, epoch_cost=None,
+              refresh: bool = False) -> List[Ticket]:
         """Execute every queued query and return the tickets in submit
         order. Execution order IS submit order - epochs only change how
         time is accounted - so energy/AAP ledgers are identical to serial
@@ -363,7 +384,15 @@ class AsyncScheduler:
         overrides it for backends whose DRAM-model ns is zero (the
         accelerator stores), WITHOUT touching the conservation-exact
         ``stats`` ledger - the timeline is an overlay, never a
-        re-measurement."""
+        re-measurement.
+
+        ``refresh=True`` makes the timeline refresh-aware: each epoch
+        pauses through the [k*tREFI, k*tREFI + tRFC) refresh windows it
+        crosses (timing.refresh_schedule), so wall clock stretches by the
+        stall while the measured epoch ns - and with it every
+        conservation invariant - is untouched. The absorbed stall lands
+        in ``EpochReport.refresh_ns`` / ``DrainReport.refresh_stall_ns``.
+        No-op on accelerator stores (no DRAM timing model)."""
         tickets, self.pending = self.pending, []
         if not tickets:
             return []
@@ -416,7 +445,15 @@ class AsyncScheduler:
             dur = erep.ns if epoch_cost is None else float(
                 epoch_cost(erep, [by_index[ti] for ti in erep.tickets]))
             erep.start_ns = clock
-            erep.end_ns = clock + dur
+            if refresh and self._timing is not None and dur > 0.0:
+                # Pausable epoch work threaded around refresh windows:
+                # the epoch interval [start, end) absorbs the stall.
+                _, end = refresh_schedule(clock, dur, self._timing)
+                erep.end_ns = end
+                erep.refresh_ns = (end - clock) - dur
+                report.refresh_stall_ns += erep.refresh_ns
+            else:
+                erep.end_ns = clock + dur
             for ti in erep.tickets:
                 by_index[ti].started_ns = erep.start_ns
                 by_index[ti].finished_ns = erep.end_ns
@@ -430,6 +467,7 @@ class AsyncScheduler:
             total.aap_count += t.stats.aap_count
             total.bytes_touched += t.stats.bytes_touched
             total.channel_bytes += t.stats.channel_bytes
+            total.refresh_stolen_ns += t.stats.refresh_stolen_ns
             report.serial_ns += t.stats.ns
         report.stats = total
         self.last_drain = report
@@ -438,6 +476,8 @@ class AsyncScheduler:
         m.counter("sched_drains").inc(1)
         m.counter("sched_epochs").inc(len(epochs))
         m.counter("sched_queries").inc(len(tickets))
+        if refresh:
+            m.counter("sched_refresh_stall_ns").inc(report.refresh_stall_ns)
         for t in tickets:
             for r in t.deferred:
                 # label by reason class, not instance ("dep:#7" -> "dep")
@@ -457,11 +497,19 @@ class AsyncScheduler:
         reasons ride in its args)."""
         tr = self.store.tracer
         for k, erep in enumerate(report.epochs):
+            eargs = {"tickets": list(erep.tickets),
+                     "measured_ns": erep.ns,
+                     "channel_ns": erep.channel_ns}
+            if erep.refresh_ns:
+                eargs["refresh_ns"] = erep.refresh_ns
             tr.span(("scheduler",), f"epoch{k}", "epoch", erep.start_ns,
-                    erep.end_ns - erep.start_ns,
-                    args={"tickets": list(erep.tickets),
-                          "measured_ns": erep.ns,
-                          "channel_ns": erep.channel_ns})
+                    erep.end_ns - erep.start_ns, args=eargs)
+            if erep.refresh_ns:
+                # Stall overlay: the refresh time this epoch absorbed,
+                # summarized as one span on its own scheduler sub-track.
+                tr.span(("scheduler", "refresh"), f"epoch{k}", "refresh",
+                        erep.start_ns, erep.refresh_ns,
+                        args={"epoch": k})
             if erep.channel_ns:
                 tr.span(("channel",), f"epoch{k}", "channel",
                         erep.start_ns, erep.channel_ns)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from ..models.sharding_ctx import shard_map
+
 
 def pipeline(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
              stage_params: Any, x_micro: jnp.ndarray, mesh,
@@ -65,9 +67,8 @@ def pipeline(stage_fn: Callable[[Any, jnp.ndarray], jnp.ndarray],
         return jax.lax.psum(outputs, axis)
 
     in_specs = (jax.tree.map(lambda _: P(axis), stage_params), P())
-    return jax.shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
-                         out_specs=P(), check_vma=False,
-                         )(stage_params, x_micro)
+    return shard_map(shard_fn, mesh=mesh, in_specs=in_specs,
+                     out_specs=P())(stage_params, x_micro)
 
 
 def bubble_fraction(n_micro: int, n_stages: int) -> float:

@@ -1,0 +1,385 @@
+"""DRAM timing-rule checker: the differential oracle for command streams.
+
+Positive path: every canonical program (Figure-20 templates + compiled
+expressions, optimized and naive, plus PSM copies) replays into a timed
+stream that is violation-free against the 8-rule DDR table. Negative
+path: corrupted streams - dropped PRECHARGEs, cross-bank ACT bursts,
+refresh-blind schedules, early PRE/ACT, premature column writes - are
+rejected with the *right* rule named, not just "illegal".
+
+The refresh half: ``defer_for_refresh`` / ``refresh_schedule`` model
+checks, the per-bank ``refresh_stolen_ns`` ledger reconciling bit-exactly
+across OpStats, the metrics registry and the trace export (single device
+and cluster), and ``drain(refresh=True)`` stretching the epoch timeline
+by exactly the refresh windows it crossed while leaving the conservation
+ledger untouched.
+
+Property tests run under hypothesis when installed; without it they fall
+back to deterministic seeded sweeps over the same generator.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import BitVector, Expr, compile_expr
+from repro.core.commands import AAP, B, D, seq_and
+from repro.core.engine import OpStats
+from repro.core.timing import (DEFAULT_TIMING, defer_for_refresh,
+                               refresh_schedule)
+from repro.core.timing_checker import (RULES, RULES_BY_NAME, TimedCommand,
+                                       TimingChecker, TimingViolationError,
+                                       _rand_expr, canonical_programs,
+                                       schedule_program, schedule_psm_copy)
+from repro.obs import Tracer
+from repro.pim import AmbitRuntime
+
+P = DEFAULT_TIMING
+VAR_ROWS = {"a": 0, "b": 1, "c": 2, "d": 3}
+
+
+def rules_of(violations):
+    return sorted({v.rule for v in violations})
+
+
+# -- the rule table -----------------------------------------------------------
+
+
+def test_rule_table_is_the_declared_contract():
+    assert [r.name for r in RULES] == [
+        "tRP", "tRCD", "tRAS", "tRC", "tWR", "tFAW", "refresh", "open-bank"]
+    assert RULES_BY_NAME["tRC"].gap(P) == P.tRAS + P.tRP
+    assert RULES_BY_NAME["tFAW"].gap(P) == P.tFAW
+    assert RULES_BY_NAME["open-bank"].gap is None
+    for rule in RULES:
+        assert rule.description
+
+
+# -- positive path: canonical streams are legal -------------------------------
+
+
+def test_canonical_programs_are_violation_free():
+    checker = TimingChecker()
+    progs = canonical_programs()
+    assert len(progs) > 30          # templates + both optimize modes
+    for name, prog in progs:
+        violations = checker.check(schedule_program(prog))
+        assert violations == [], (name, violations)
+
+
+def test_psm_copy_stream_is_legal():
+    checker = TimingChecker()
+    for n_lines in (1, 8, 128):     # one cache line .. a full 8 KB row
+        events = schedule_psm_copy(n_lines)
+        assert checker.check(events) == []
+        assert sum(e.kind == "WR" for e in events) == n_lines
+
+
+def test_split_vs_naive_aap_occupancy():
+    """The replay honors the Section 4.3 distinction: a split-decoder AAP
+    (exactly one B-group address) precharges at tRAS and occupies the
+    bank for tRAS+tRP = 50 ns; a naive RowClone-FPM AAP needs two full
+    activations: 2*tRAS+tRP = 85 ns."""
+    split = schedule_program([AAP(D(0), B(0)), AAP(D(1), B(0))])
+    assert [e.t_ns for e in split if e.kind == "ACT" and e.macro_id == 1][0] \
+        == P.tRAS + P.tRP                              # 50 ns
+    assert split[1].t_ns == P.aap_overlap_extra_ns     # paired ACT @ +4
+    naive = schedule_program([AAP(D(0), D(1)), AAP(D(2), D(3))])
+    assert [e.t_ns for e in naive if e.kind == "ACT" and e.macro_id == 1][0] \
+        == 2 * P.tRAS + P.tRP                          # 85 ns
+    assert naive[1].t_ns == P.tRAS                     # full restoration
+    assert TimingChecker().check(split) == []
+    assert TimingChecker().check(naive) == []
+
+
+def _check_compiled_stream_legal(seed):
+    rng = np.random.default_rng(seed)
+    expr = _rand_expr(rng)
+    checker = TimingChecker()
+    for optimize in (False, True):
+        cp = compile_expr(expr, VAR_ROWS, 4, optimize=optimize)
+        events = checker.verify_program(cp.program)
+        assert events and events[0].t_ns == 0.0
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1))
+    @settings(max_examples=40, deadline=None)
+    def test_compiled_streams_legal(seed):
+        _check_compiled_stream_legal(seed)
+else:
+    @pytest.mark.parametrize("seed", range(40))
+    def test_compiled_streams_legal(seed):
+        _check_compiled_stream_legal(seed)
+
+
+# -- negative path: corrupted streams name the right rule ---------------------
+
+
+def test_dropped_precharges_flag_open_bank():
+    prog = seq_and(D(0), D(1), D(2))
+    legal = schedule_program(prog)
+    corrupted = [e for e in legal if e.kind != "PRE"]
+    violations = TimingChecker().check(corrupted)
+    assert violations and rules_of(violations) == ["open-bank"]
+    # both ACTs of every macro after the first re-activate an open bank,
+    # and the stream still ends with the bank open
+    assert len(violations) == 2 * (len(prog) - 1) + 1
+    assert "missing PRECHARGE" in violations[0].message
+
+
+def test_fifth_act_across_rank_violates_tfaw():
+    """tFAW is rank-level and counts a rolling window of four: four ACTs
+    in 15 ns are legal, the fifth inside tFAW of the 4th-previous is
+    not - even though every bank is individually legal."""
+    def burst(n_banks):
+        events = []
+        for b in range(n_banks):
+            t = 5.0 * b
+            events.append(TimedCommand(t, "ACT", b, b))
+            events.append(TimedCommand(t + P.tRAS, "PRE", b, b))
+        return events
+
+    assert TimingChecker().check(burst(4)) == []
+    violations = TimingChecker().check(burst(5))
+    assert rules_of(violations) == ["tFAW"]
+    assert len(violations) == 1
+    assert violations[0].t_ns == 20.0
+    assert "5th ACT" in violations[0].message
+
+
+def test_refresh_blind_schedule_is_rejected_aware_is_clean():
+    prog = 60 * seq_and(D(0), D(1), D(2))   # ~18 us: crosses 2 windows
+    blind = schedule_program(prog, refresh_aware=False)
+    violations = TimingChecker().check(blind)
+    assert violations and rules_of(violations) == ["refresh"]
+    aware = schedule_program(prog, refresh_aware=True)
+    assert TimingChecker().check(aware) == []
+    # the blind stream is fine on a rank with refresh disabled: the only
+    # thing wrong with it is issuing during REF
+    assert TimingChecker(check_refresh=False).check(blind) == []
+
+
+def test_schedule_defers_start_past_refresh_window():
+    prog = seq_and(D(0), D(1), D(2))
+    events = schedule_program(prog, start_ns=P.tREFI - 5.0)
+    assert events[0].t_ns == P.tREFI + P.tRFC      # held through REF
+    assert TimingChecker().check(events) == []
+
+
+def test_early_precharge_and_activate():
+    events = [
+        TimedCommand(0.0, "ACT", 0, 0),
+        TimedCommand(20.0, "PRE", 0, 0),    # 20 < tRAS=35
+        TimedCommand(30.0, "ACT", 0, 1),    # 30 < tRC=50, 10 < tRP=15
+        TimedCommand(30.0 + P.tRAS, "PRE", 0, 1),
+    ]
+    violations = TimingChecker().check(events)
+    assert rules_of(violations) == ["tRAS", "tRC", "tRP"]
+    assert len(violations) == 3
+
+
+def test_premature_write_and_early_precharge_after_write():
+    events = [
+        TimedCommand(0.0, "ACT", 0, 0),
+        TimedCommand(10.0, "WR", 0, 0),     # 10 < tRCD=15
+        TimedCommand(45.0, "WR", 0, 0),
+        TimedCommand(50.0, "PRE", 0, 0),    # 5 < tWR=15 after last WR
+    ]
+    violations = TimingChecker().check(events)
+    assert rules_of(violations) == ["tRCD", "tWR"]
+    assert len(violations) == 2
+
+
+def test_write_with_no_open_row():
+    violations = TimingChecker().check([TimedCommand(0.0, "WR", 0, 0)])
+    assert rules_of(violations) == ["open-bank"]
+    assert "no open row" in violations[0].message
+
+
+def test_stream_ending_with_open_bank():
+    violations = TimingChecker().check([TimedCommand(0.0, "ACT", 0, 0)])
+    assert rules_of(violations) == ["open-bank"]
+    assert "missing final PRECHARGE" in violations[0].message
+
+
+def test_idle_precharge_is_a_harmless_noop_but_starts_trp():
+    ok = [TimedCommand(0.0, "PRE", 0, 0),
+          TimedCommand(P.tRP, "ACT", 0, 1),
+          TimedCommand(P.tRP + P.tRAS, "PRE", 0, 1)]
+    assert TimingChecker().check(ok) == []
+    early = [TimedCommand(0.0, "PRE", 0, 0),
+             TimedCommand(10.0, "ACT", 0, 1),     # 10 < tRP=15
+             TimedCommand(10.0 + P.tRAS, "PRE", 0, 1)]
+    assert rules_of(TimingChecker().check(early)) == ["tRP"]
+
+
+def test_verify_program_raises_structured_error():
+    prog = 60 * seq_and(D(0), D(1), D(2))
+    with pytest.raises(TimingViolationError) as exc:
+        TimingChecker().verify_program(prog, refresh_aware=False)
+    err = exc.value
+    assert err.violations and all(v.rule == "refresh"
+                                  for v in err.violations)
+    assert "timing violation(s)" in str(err)
+    if len(err.violations) > 3:                 # message truncates
+        assert f"+{len(err.violations) - 3} more" in str(err)
+    # the same program scheduled refresh-aware verifies clean
+    events = TimingChecker().verify_program(prog, refresh_aware=True)
+    assert events
+
+
+# -- the refresh model (timing.py) -------------------------------------------
+
+
+def test_defer_for_refresh_window_arithmetic():
+    # no overlap: untouched
+    assert defer_for_refresh(0.0, 50.0) == 0.0
+    # a burst that would straddle the first window is pushed past it
+    assert defer_for_refresh(P.tREFI - 1.0, 50.0) == P.tREFI + P.tRFC
+    # issuing inside the window is equally deferred
+    assert defer_for_refresh(P.tREFI + 10.0, 50.0) == P.tREFI + P.tRFC
+    # a burst longer than the inter-window gap can never be scheduled
+    with pytest.raises(ValueError):
+        defer_for_refresh(0.0, P.tREFI - P.tRFC + 1.0)
+
+
+def test_refresh_schedule_slices_work_across_windows():
+    # fully before the first window: no stall
+    assert refresh_schedule(0.0, 100.0) == (0.0, 100.0)
+    # crossing one window stalls by exactly one tRFC
+    start, finish = refresh_schedule(0.0, 10_000.0)
+    assert start == 0.0
+    assert finish - start - 10_000.0 == pytest.approx(P.tRFC)
+    # starting inside a window first waits it out
+    start, finish = refresh_schedule(P.tREFI + 1.0, 100.0)
+    assert start == P.tREFI + P.tRFC
+    assert finish == start + 100.0
+
+
+def test_steady_state_refresh_overhead():
+    assert P.refresh_overhead == pytest.approx(
+        P.tRFC / (P.tREFI - P.tRFC))
+    assert P.refresh_stolen_ns(1000.0) == pytest.approx(
+        1000.0 * P.refresh_overhead)
+    assert 0.04 < P.refresh_overhead < 0.05     # ~4.7% at DDR3 8Gb-class
+
+
+# -- refresh ledger reconciliation (planner / cluster / metrics / trace) ------
+
+
+def _chain_bits(n, n_bits, seed=0):
+    rng = np.random.default_rng(seed)
+    return [BitVector.from_bits(rng.integers(0, 2, n_bits).astype(bool))
+            for _ in range(n)]
+
+
+def test_refresh_ledger_reconciles_across_all_surfaces():
+    """The planner computes ONE per-call per-bank stolen figure; the
+    OpStats ledger, the metric series and the trace spans all accumulate
+    that same value in the same order, so equality is ==, not approx."""
+    tr = Tracer(enabled=True)
+    rt = AmbitRuntime(banks=2, subarrays=2, words=2, tracer=tr)
+    n_bits = 4 * rt.store.device.words * 64     # 4 slots: spans banks
+    vecs = _chain_bits(4, n_bits)
+    acc = rt.put(vecs[0])
+    expect_bank = {}
+    expect = OpStats()
+    for v in vecs[1:]:
+        acc = rt.and_(acc, rt.put(v))
+        for b, st in sorted(rt.planner.last_report.per_bank.items()):
+            expect_bank[b] = (expect_bank.get(b, 0.0)
+                              + st.refresh_stolen_ns)
+        expect += rt.last_stats
+    assert expect.refresh_stolen_ns > 0.0
+    # refresh tax never inflates the busy-time ledger itself
+    assert expect.ns > 0.0
+    assert rt.session_stats.refresh_stolen_ns == expect.refresh_stolen_ns
+    series = rt.metrics.counters.get("refresh_stolen_ns").series
+    for b, want in sorted(expect_bank.items()):
+        if not want:
+            continue
+        key = (("bank", str(b)), ("device", "0"))
+        assert series.get(key) == want, (b, series.get(key), want)
+        got = sum(e.dur_ns for e in tr.events
+                  if e.cat == "refresh"
+                  and e.track == ("device0", f"bank{b}"))
+        assert got == want, (b, got, want)
+
+
+def test_cluster_refresh_metrics_reconcile_per_device_bank():
+    rt = AmbitRuntime(banks=2, subarrays=2, words=2, devices=2)
+    n_bits = 4 * rt.device.words * 64           # 4 chunks: both devices
+    a, b = _chain_bits(2, n_bits, seed=3)
+    out = rt.and_(rt.put(a), rt.put(b))
+    assert out is not None
+    report = rt.planner.last_report
+    assert report.stats.refresh_stolen_ns > 0.0
+    series = rt.metrics.counters.get("refresh_stolen_ns").series
+    devices_seen = set()
+    for (d, bank), st in sorted(report.per_bank.items()):
+        if not st.refresh_stolen_ns:
+            continue
+        key = (("bank", str(bank)), ("device", str(d)))
+        assert series.get(key) == st.refresh_stolen_ns
+        devices_seen.add(d)
+    assert devices_seen == {0, 1}               # the tax is shard-local
+
+
+# -- refresh-aware drain ------------------------------------------------------
+
+
+def _drained(refresh, queries=4, rows=48):
+    rng = np.random.default_rng(11)
+    rt = AmbitRuntime(banks=8, subarrays=4, words=128)
+    n_bits = rt.store.device.words * 64
+    ab = Expr.var("a") & Expr.var("b")
+    for _ in range(queries):
+        hs = [rt.put(BitVector.from_bits(
+            rng.integers(0, 2, (rows, n_bits)).astype(bool)))
+            for _ in range(2)]
+        rt.submit(ab, {"a": hs[0], "b": hs[1]})
+    rt.drain(refresh=refresh)
+    return rt.last_drain
+
+
+def test_drain_refresh_stretches_wall_not_ledger():
+    plain = _drained(False)
+    aware = _drained(True)
+    # the conservation ledger is untouched: refresh is wall-clock only
+    assert aware.stats.ns == plain.stats.ns
+    assert aware.stats.energy_nj == plain.stats.energy_nj
+    assert aware.stats.aap_count == plain.stats.aap_count
+    # the wall stretch is exactly the stall, which is whole REF windows
+    assert plain.refresh_stall_ns == 0.0
+    assert aware.refresh_stall_ns > 0.0
+    assert aware.wall_ns - plain.wall_ns == aware.refresh_stall_ns
+    assert aware.refresh_stall_ns % P.tRFC == pytest.approx(0.0)
+    # per-epoch stalls sum to the drain total and stretch the timeline
+    assert sum(e.refresh_ns for e in aware.epochs) == \
+        aware.refresh_stall_ns
+    for ep, pp in zip(aware.epochs, plain.epochs):
+        assert ep.end_ns - ep.start_ns == \
+            (pp.end_ns - pp.start_ns) + ep.refresh_ns
+
+
+def test_drain_refresh_noop_when_work_fits_before_first_window():
+    plain = _drained(False, queries=1, rows=4)
+    aware = _drained(True, queries=1, rows=4)
+    assert aware.wall_ns < P.tREFI              # never reaches a window
+    assert aware.refresh_stall_ns == 0.0
+    assert aware.wall_ns == plain.wall_ns
+
+
+def test_drain_refresh_is_deterministic():
+    a = _drained(True, queries=2, rows=32)
+    b = _drained(True, queries=2, rows=32)
+    assert a.wall_ns == b.wall_ns
+    assert a.refresh_stall_ns == b.refresh_stall_ns
+    assert [e.refresh_ns for e in a.epochs] == \
+        [e.refresh_ns for e in b.epochs]

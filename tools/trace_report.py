@@ -11,6 +11,9 @@ no live Tracer/registry needed, so this works on CI artifacts:
   * per-bank busy: busy ns / busy%% per ``deviceN/bankM`` track from the
     ``bank``-category spans;
   * channel vs compute overlap from the ``channel``-category spans;
+  * refresh stall: stolen ns per track from the ``refresh``-category
+    spans (the planner's per-bank ``refresh_stall`` ticks and the
+    scheduler's ``drain(refresh=True)`` epoch stalls);
   * event counts per category.
 
 ``--json`` emits the same summary as a machine-readable dict (sorted
@@ -45,6 +48,7 @@ def summarise(events, max_batch=None):
     epoch_spans = []
     channel_ns = 0.0
     bank_busy = defaultdict(float)
+    refresh_stall = defaultdict(float)
     for e in events:
         ph = e.get("ph")
         if ph == "M":
@@ -63,8 +67,16 @@ def summarise(events, max_batch=None):
         elif cat == "bank":
             bank_busy[tnames.get((e["pid"], e["tid"]),
                                  f"pid{e['pid']}/tid{e['tid']}")] += dur
+        elif cat == "refresh":
+            refresh_stall[tnames.get((e["pid"], e["tid"]),
+                                     f"pid{e['pid']}/tid{e['tid']}")] += dur
 
     out = {"event_counts": dict(sorted(cats.items()))}
+    if refresh_stall:
+        out["refresh"] = {
+            "total_stolen_ns": sum(refresh_stall.values()),
+            "tracks": {name: ns
+                       for name, ns in sorted(refresh_stall.items())}}
     if epoch_spans:
         wall = sum(d for _, d, _ in epoch_spans)
         n_q = sum(q for _, _, q in epoch_spans)
@@ -117,6 +129,13 @@ def render(summary):
             if "busy_pct" in row:
                 s += f" busy={row['busy_pct']:.1f}%"
             lines.append(s)
+    refresh = summary.get("refresh")
+    if refresh:
+        lines.append("== refresh ==")
+        lines.append(
+            f"total_stolen_ns={refresh['total_stolen_ns']:.1f}")
+        for name, ns in refresh["tracks"].items():
+            lines.append(f"{name} stolen_ns={ns:.1f}")
     lines.append("== events ==")
     lines.append(" ".join(f"{c}={n}"
                           for c, n in summary["event_counts"].items()))
