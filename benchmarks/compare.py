@@ -35,6 +35,9 @@ _TOKEN = re.compile(r"([A-Za-z_][\w.]*)=(\S+)")
 # run, not just diffed.
 _REQUIRED_TOKENS = {
     "serve_": ("pack_eff_pct", "bank_busy_pct"),
+    # optimizer rows must keep reporting CSE/cache reconciliation -
+    # losing a counter silently would blind the opt-determinism job
+    "kern_pim_optimizer": ("cse_hits", "cse_mat", "cache_hits"),
 }
 
 

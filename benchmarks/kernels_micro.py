@@ -265,6 +265,88 @@ def pim_async_multiquery(n_queries: int = 4, n_ops: int = 3,
     return out
 
 
+def pim_optimizer(n_tenants: int = 6, n_queries: int = 24) -> List[Row]:
+    """Cost-based multi-query optimizer on the TPC-H-flavoured suite:
+    ``n_queries`` multi-predicate scans from a Zipfian tenant mix over
+    shared-prefix range pools (apps.bitweaving_db). Unoptimized drain
+    executes every submitted comparator tree; ``drain(optimize=True)``
+    CSE-shares the pooled comparator subtrees across tickets (one
+    materialization, DAG references downstream). The acceptance bar is
+    >= 1.5x DRAM-op time reduction with bit-exact results vs the numpy
+    oracle and ``opt_*`` counters reconciled against the drain ledger.
+    A second optimized round resubmits the same mix: every query must
+    be served from the result cache with ZERO device ops."""
+    from repro.apps.bitweaving_db import (TpchTable, predicate_plan,
+                                          zipf_tenant_queries)
+    from repro.core import DRAMGeometry
+    from repro.pim import AmbitRuntime
+
+    geom = DRAMGeometry(rows_per_subarray=64)
+
+    def build():
+        rt = AmbitRuntime(geom, banks=4, devices=1, subarrays=4,
+                          words=4, seed=1)
+        table = TpchTable.synthesize(n_rows=rt.store.device.words * 64,
+                                     seed=2)
+        queries = zipf_tenant_queries(table, n_tenants=n_tenants,
+                                      n_queries=n_queries, seed=3)
+        return rt, table, queries
+
+    def submit_all(rt, table, queries):
+        return [rt.submit(*predicate_plan(table, specs, rt))
+                for _, specs in queries]
+
+    def check(rt, table, queries, tickets):
+        for (_, specs), t in zip(queries, tickets):
+            got = np.asarray(rt.get(t.result).bits()).ravel()
+            got = got[:table.n_rows].astype(bool)
+            assert np.array_equal(got, table.oracle(specs)), specs
+
+    rt_u, table_u, queries = build()
+    t0 = time.perf_counter()
+    tu = submit_all(rt_u, table_u, queries)
+    rt_u.drain()
+    us_unopt = (time.perf_counter() - t0) * 1e6
+    check(rt_u, table_u, queries, tu)
+    su = rt_u.last_drain.stats
+
+    rt_o, table_o, _ = build()
+    t0 = time.perf_counter()
+    to = submit_all(rt_o, table_o, queries)
+    rt_o.drain(optimize=True)
+    us_opt = (time.perf_counter() - t0) * 1e6
+    check(rt_o, table_o, queries, to)
+    so = rt_o.last_drain.stats
+    rep = rt_o.last_drain.opt
+
+    # opt_* counters reconcile bit-exactly with the drain's OptReport
+    m = rt_o.store.metrics
+    assert m.counter("opt_cse_hits").total() == rep.cse_hits
+    assert m.counter("opt_cache_misses").total() == rep.cache_misses
+    assert rep.cse_hits > 0 and so.aap_count < su.aap_count
+    speedup = su.ns / so.ns
+    aap_red = su.aap_count / so.aap_count
+    assert speedup >= 1.5, f"optimizer saved only {speedup:.2f}x"
+
+    # round 2: the same mix again - served entirely from the result cache
+    t2 = submit_all(rt_o, table_o, queries)
+    rt_o.drain(optimize=True)
+    check(rt_o, table_o, queries, t2)
+    rep2 = rt_o.last_drain.opt
+    assert rep2.cache_hits == n_queries
+    assert rt_o.last_drain.stats.aap_count == 0
+    assert m.counter("opt_cache_hits").total() == rep2.cache_hits
+
+    return [("kern_pim_optimizer", us_opt,
+             f"queries={n_queries} tenants={n_tenants} "
+             f"dram_speedup={speedup:.1f}x "
+             f"({su.ns:.0f} vs {so.ns:.0f} ns) aap_reduction="
+             f"{aap_red:.1f}x ({su.aap_count} vs {so.aap_count}) "
+             f"cse_hits={rep.cse_hits} cse_mat={rep.cse_materialized} "
+             f"cache_hits={rep2.cache_hits} "
+             f"unopt_wall={us_unopt:.0f}us")]
+
+
 def pallas_resident_chain(n_ops: int = 6, rows: int = 64,
                           n_queries: int = 4) -> List[Row]:
     """Accelerator-resident DeviceStore vs the non-resident jnp path: a
@@ -346,6 +428,7 @@ def kernels_micro() -> List[Row]:
     rows.extend(pallas_resident_chain())
     rows.extend(pim_sharded_scan())
     rows.extend(pim_async_multiquery())
+    rows.extend(pim_optimizer())
     rng = np.random.default_rng(0)
     shape = (256, 4096)  # 4 MB packed = 128 Mbit operands
     nbytes = int(np.prod(shape)) * 4

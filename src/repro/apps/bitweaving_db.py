@@ -60,20 +60,22 @@ def word_at_a_time_scan(values: np.ndarray, c1: int, c2: int) -> int:
     return int(((values >= c1) & (values <= c2)).sum())
 
 
-def scan_expr(bits: int, c1: int, c2: int):
+def scan_expr(bits: int, c1: int, c2: int, prefix: str = "p"):
     """The BitWeaving-V predicate c1 <= v <= c2 as ONE expression DAG over
-    plane variables p0..p{b-1} (MSB first) - the exact recurrence of
-    kernels/ref.bitweaving_scan, but lowered as a whole tree so the PIM
-    planner can schedule it as a single batched AAP program. Constant
-    folding (expr.py) prunes the ZERO/ONE seeds; CSE shares the plane
-    loads between the two comparisons."""
+    plane variables {prefix}0..{prefix}{b-1} (MSB first) - the exact
+    recurrence of kernels/ref.bitweaving_scan, but lowered as a whole
+    tree so the PIM planner can schedule it as a single batched AAP
+    program. Constant folding (expr.py) prunes the ZERO/ONE seeds; CSE
+    shares the plane loads between the two comparisons. ``prefix``
+    namespaces the plane variables so predicates over several columns
+    compose into one conjunction (the TPC-H suite below)."""
     from ..core.expr import Expr, ONE, ZERO
 
     def cmp(const: int):
         gt, lt, eq = ZERO, ZERO, ONE
         for i in range(bits):
             cbit = (const >> (bits - 1 - i)) & 1
-            p = Expr.var(f"p{i}")
+            p = Expr.var(f"{prefix}{i}")
             if cbit:
                 lt = lt | (eq & ~p)
             else:
@@ -165,6 +167,123 @@ def ambit_scan_resident(col: BitWeavingColumn, c1: int, c2: int,
         runtime.free(out)
         return count, total, None
     return count, total, out
+
+
+# -- TPC-H-flavoured multi-predicate suite ------------------------------------
+#
+# "Understanding Bulk-Bitwise Processing In-Memory Through Database
+# Analytics" measures Ambit-class hardware on database scans: thousands
+# of tenants issuing overlapping range predicates over a handful of
+# columns. This suite reproduces that shape - a lineitem-flavoured table
+# of ~8 bit-sliced columns, per-column pools of range predicates sharing
+# their lower bound (so the comparator recurrence for the shared prefix
+# is the SAME Expr subtree across queries), and a Zipfian tenant mix -
+# as the workload the drain-time query optimizer is measured on
+# (``kern_pim_optimizer`` in benchmarks/kernels_micro.py).
+
+# (name, bits) - widths keep whole-mix programs small enough for compact
+# test geometries while giving every column a distinct selectivity.
+TPCH_COLUMNS = (
+    ("quantity", 6), ("discount", 4), ("tax", 4), ("shipmode", 3),
+    ("priority", 3), ("suppkey", 7), ("extprice", 8), ("status", 2),
+)
+
+
+@dataclasses.dataclass
+class TpchTable:
+    """A synthetic lineitem-flavoured table: each column bit-sliced for
+    BitWeaving-V scans, with the raw values kept for oracle checks."""
+
+    n_rows: int
+    values: "dict[str, np.ndarray]"
+    columns: "dict[str, BitWeavingColumn]"
+
+    @staticmethod
+    def synthesize(n_rows: int = 4096, seed: int = 0,
+                   columns=TPCH_COLUMNS) -> "TpchTable":
+        rng = np.random.default_rng(seed)
+        values, cols = {}, {}
+        for name, bits in columns:
+            v = rng.integers(0, 1 << bits, n_rows, dtype=np.uint32)
+            values[name] = v
+            cols[name] = BitWeavingColumn.from_values(v, bits)
+        return TpchTable(n_rows, values, cols)
+
+    def oracle(self, specs) -> np.ndarray:
+        """Row-selection bits for a conjunction of
+        ``(column, c1, c2)`` range predicates (numpy ground truth)."""
+        sel = np.ones(self.n_rows, bool)
+        for col, c1, c2 in specs:
+            v = self.values[col]
+            sel &= (v >= c1) & (v <= c2)
+        return sel
+
+
+def shared_prefix_ranges(bits: int, n: int, rng) -> list:
+    """``n`` range predicates over a ``bits``-wide column sharing their
+    lower bound: ``c1`` is fixed, the upper bounds spread above it. The
+    shared bound makes the whole lower-comparator subtree of
+    ``scan_expr`` identical across the pool - exactly the structure
+    cross-ticket CSE materializes once."""
+    lo = int(rng.integers(0, 1 << max(bits - 1, 1)))
+    his = sorted({int(h) for h in rng.integers(lo, 1 << bits, n)})
+    if not his:
+        his = [(1 << bits) - 1]
+    return [(lo, hi) for hi in his]
+
+
+def predicate_plan(table: TpchTable, specs, runtime,
+                   pin_planes: bool = False):
+    """A multi-column conjunction as one submittable
+    ``(expression, env)`` plan: each ``(column, c1, c2)`` term is the
+    BitWeaving comparator over that column's resident planes (uploaded
+    once per runtime, shared by every later plan), ANDed together.
+    Column names namespace the plane variables, so plans over different
+    column sets compose in one drain."""
+    expr, env = None, {}
+    for col, c1, c2 in specs:
+        column = table.columns[col]
+        planes, _ = ensure_resident_planes(column, runtime,
+                                           pin_planes=pin_planes)
+        term = scan_expr(column.bits, int(c1), int(c2), prefix=f"{col}_b")
+        env.update({f"{col}_b{i}": rbv for i, rbv in enumerate(planes)})
+        expr = term if expr is None else expr & term
+    return expr, env
+
+
+def zipf_tenant_queries(table: TpchTable, n_tenants: int, n_queries: int,
+                        seed: int = 0, s: float = 1.2,
+                        ranges_per_column: int = 3,
+                        cols_per_query: int = 2) -> list:
+    """A Zipfian tenant mix over shared predicate templates: every
+    tenant owns one fixed conjunction template (columns + ranges drawn
+    from the per-column shared-prefix pools), and queries sample tenants
+    with Zipf(s) popularity. Hot tenants repeat their template verbatim
+    (the result cache serves them); distinct tenants overlap on the
+    pooled column predicates (cross-ticket CSE shares them). Returns
+    ``[(tenant_id, specs), ...]`` with ``specs`` as taken by
+    ``predicate_plan`` / ``TpchTable.oracle``."""
+    rng = np.random.default_rng(seed)
+    names = list(table.columns)
+    pools = {c: shared_prefix_ranges(table.columns[c].bits,
+                                     ranges_per_column, rng)
+             for c in names}
+    templates = []
+    for t in range(n_tenants):
+        trng = np.random.default_rng(seed * 7919 + 31 * t + 1)
+        picks = trng.choice(len(names), size=min(cols_per_query,
+                                                 len(names)),
+                            replace=False)
+        specs = []
+        for ci in sorted(int(c) for c in picks):
+            col = names[ci]
+            pool = pools[col]
+            specs.append((col, *pool[int(trng.integers(len(pool)))]))
+        templates.append(tuple(specs))
+    ranks = np.arange(1, n_tenants + 1, dtype=np.float64) ** -s
+    probs = ranks / ranks.sum()
+    return [(int(t), templates[int(t)])
+            for t in rng.choice(n_tenants, size=n_queries, p=probs)]
 
 
 def ambit_scan_stats(col: BitWeavingColumn, c1: int, c2: int,

@@ -396,19 +396,52 @@ class AmbitDevice:
             else:
                 self._bbop_group(op, db, ds, group)
 
+    def _staging_rows(self, db: int, ds: int, n: int) -> List[int]:
+        """Pick ``n`` staging rows in subarray ``(db, ds)``, top-down
+        from the end of the D-group, SKIPPING rows the device's
+        RowAllocator has live. The naive descending pick clobbered live
+        data whenever the allocator's usable region reached the top row
+        - an allocator with ``scratch_rows=0`` (the lazy default), or
+        optimizer-introduced scratch handles landing in a full subarray
+        next to user operands, put real bitvector rows exactly where
+        staging writes. Row index never enters the cost model, so the
+        skip leaves every ledger byte-identical."""
+        alloc = self._allocator      # attribute, not property: never
+        rows: List[int] = []         # instantiate one just to ask
+        r = self.geom.data_rows - 1
+        while len(rows) < n and r >= 0:
+            if alloc is None or not alloc.is_live((db, ds, r)):
+                rows.append(r)
+            r -= 1
+        if len(rows) < n:
+            # Every row is live (an allocator with scratch_rows=0 can
+            # fill the whole D-group): fall back to the legacy top-down
+            # pick for the remainder. _has_hazard treats these rows as
+            # staging targets, so any within-call alias still forces the
+            # sequential path.
+            r = self.geom.data_rows - 1
+            while len(rows) < n and r >= 0:
+                if r not in rows:
+                    rows.append(r)
+                r -= 1
+        if len(rows) < n:
+            raise AmbitError(
+                f"bbop needs {n} staging rows but bank {db} subarray "
+                f"{ds} has only {self.geom.data_rows} data rows")
+        return rows
+
     def _has_hazard(self, slots: List[tuple]) -> bool:
         """True when batched grouping could reorder a read past a write:
         a source slot aliases a destination slot, or a destination/source
-        slot aliases a PSM staging scratch row (top of the D-group) that
-        some slot's staging will overwrite."""
+        slot aliases a PSM staging row (the allocator-aware top-of-
+        D-group pick) that some slot's staging will overwrite."""
         dst_set = {d for d, _ in slots}
         scratch_set = set()
         for (db, ds, _), slot_srcs in slots:
-            scratch = self.geom.data_rows - 1
-            for s in slot_srcs:
-                if (s[0], s[1]) != (db, ds):
-                    scratch_set.add((db, ds, scratch))
-                    scratch -= 1
+            n_stage = sum(1 for s in slot_srcs if (s[0], s[1]) != (db, ds))
+            if n_stage:
+                scratch_set.update(
+                    (db, ds, r) for r in self._staging_rows(db, ds, n_stage))
         if dst_set & scratch_set:
             return True
         return any(s in dst_set or s in scratch_set
@@ -428,13 +461,16 @@ class AmbitDevice:
         gathered = [np.empty((n, self.words), np.uint64)
                     for _ in range(n_srcs)]
         for gi, (_, slot_srcs) in enumerate(group):
-            # Stage exactly as the sequential path does (descending scratch
-            # rows per slot), gathering each source's value right after its
-            # staging so later slots' staging cannot clobber it.
-            scratch = self.geom.data_rows - 1
+            # Stage exactly as the sequential path does (the same
+            # allocator-aware staging rows per slot), gathering each
+            # source's value right after its staging so later slots'
+            # staging cannot clobber it.
+            n_stage = sum(1 for s in slot_srcs
+                          if (s[0], s[1]) != (db, ds))
+            stage_rows = iter(self._staging_rows(db, ds, n_stage)
+                              if n_stage else ())
             for si, s in enumerate(slot_srcs):
-                gathered[si][gi], scratch = \
-                    self._fetch_src(db, ds, s, scratch)
+                gathered[si][gi] = self._fetch_src(db, ds, s, stage_rows)
         batch = AmbitSubarray(self.geom, self.timing, words=self.words,
                               n_rows=n)
         for si in range(n_srcs):
@@ -446,17 +482,19 @@ class AmbitDevice:
         sub.stats.merge(batch.stats)
 
     def _fetch_src(self, db: int, ds: int, src: tuple,
-                   scratch: int) -> Tuple[np.ndarray, int]:
+                   stage_rows) -> np.ndarray:
         """Source row content for a slot destined to subarray (db, ds),
-        accounting PSM staging cost when the source is not co-located (the
-        data still physically lands in the destination subarray's scratch
-        row, mirroring the sequential path). Returns (value, next_scratch)."""
+        accounting PSM staging cost when the source is not co-located
+        (the data still physically lands in the destination subarray's
+        next staging row from ``stage_rows``, mirroring the sequential
+        path)."""
         sb, ss, sr = src
         bank = self.banks[db]
         if (sb, ss) == (db, ds):
-            return bank.subarrays[ds].read_row(sr), scratch
+            return bank.subarrays[ds].read_row(sr)
+        scratch = next(stage_rows)
         self._stage_psm(db, ds, src, scratch)
-        return bank.subarrays[ds].read_row(scratch), scratch - 1
+        return bank.subarrays[ds].read_row(scratch)
 
     def migrate_row(self, src: tuple, dst: tuple) -> None:
         """Copy one row between arbitrary slots: intra-bank via
@@ -500,15 +538,18 @@ class AmbitDevice:
         db, ds, dr = dst
         bank = self.banks[db]
         staged = []
-        # Scratch rows for staging PSM copies live at the top of the D-group.
-        scratch = self.geom.data_rows - 1
+        # Staging rows live at the top of the D-group, skipping any the
+        # allocator has live (see _staging_rows).
+        n_stage = sum(1 for s in srcs if (s[0], s[1]) != (db, ds))
+        stage_rows = iter(self._staging_rows(db, ds, n_stage)
+                          if n_stage else ())
         for src in srcs:
             if (src[0], src[1]) == (db, ds):
                 staged.append(src[2])
             else:  # slow path: stage into the destination subarray
+                scratch = next(stage_rows)
                 self._stage_psm(db, ds, src, scratch)
                 staged.append(scratch)
-                scratch -= 1
         bank.subarrays[ds].bbop(op, dr, *staged)
 
     # -- convenience ----------------------------------------------------------

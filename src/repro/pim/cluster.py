@@ -519,6 +519,7 @@ class PimCluster(LruSpillBase):
         cbv.dirty = False
         self._charge_io("to_device", "fault_in", cbv.device_bytes)
         self._register(cbv)
+        self._invalidate(cbv)   # placement changed: generation bumps
         return cbv
 
     def _fault_in_partial(self, cbv: ClusterBitVector,
@@ -557,6 +558,7 @@ class PimCluster(LruSpillBase):
         self._charge_io("to_device", "fault_in",
                         len(missing) * self.row_bytes)
         self._touch(cbv)
+        self._invalidate(cbv)   # placement changed: generation bumps
         return cbv
 
     # -- cross-device migration ----------------------------------------------
@@ -728,8 +730,16 @@ class ClusterPlanner:
             try:
                 for d in sorted(by_dev):
                     idxs = by_dev[d]
-                    sub_env = {nm: self._subview(env[nm], d, idxs)
-                               for nm in names}
+                    # Names bound to the same handle must share ONE view:
+                    # distinct views over the same slots would each free
+                    # the old slot when colocation migrates the chunk.
+                    views: Dict[int, ResidentBitVector] = {}
+                    sub_env = {}
+                    for nm in names:
+                        key = id(env[nm])
+                        if key not in views:
+                            views[key] = self._subview(env[nm], d, idxs)
+                        sub_env[nm] = views[key]
                     res = cl.planners[d].execute(expression, sub_env)
                     cl.stores[d].disown(res)
                     # Per-device colocation may have moved operand rows

@@ -232,6 +232,7 @@ class DeviceStore(LruSpillBase):
         rbv.dirty = False
         self.adopt(rbv)
         self._charge_io("to_device", "fault_in", rbv.device_bytes)
+        self._invalidate(rbv)   # placement changed: generation bumps
         return rbv
 
     # -- device-side reduction -------------------------------------------------

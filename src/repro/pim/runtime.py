@@ -227,7 +227,7 @@ class AmbitRuntime:
                                      out_name=out_name, now_ns=now_ns)
 
     def drain(self, now_ns: float = 0.0, epoch_cost=None,
-              refresh: bool = False):
+              refresh: bool = False, optimize: bool = False):
         """Execute every queued query, overlapping bank/device-disjoint
         queries in epochs. Returns the tickets in submit order; the
         drain's combined cost (sum of epoch maxima, summed energy/AAPs,
@@ -235,10 +235,15 @@ class AmbitRuntime:
         ``now_ns``/``epoch_cost`` lay the epochs on a simulated clock
         (per-ticket ``started_ns``/``finished_ns``) for serving
         frontends; ``refresh=True`` pauses that timeline through DRAM
-        refresh windows - see ``AsyncScheduler.drain``."""
+        refresh windows; ``optimize=True`` runs the cost-based query
+        optimizer (cross-ticket CSE + result cache, bit-identical
+        results) - see ``AsyncScheduler.drain``. NOTE: distinct from
+        this runtime's constructor flag ``optimize=``, which controls
+        the per-program AAP peephole inside the planner."""
         tickets = self.scheduler.drain(now_ns=now_ns,
                                        epoch_cost=epoch_cost,
-                                       refresh=refresh)
+                                       refresh=refresh,
+                                       optimize=optimize)
         if tickets:
             st = OpStats()
             st += self.scheduler.last_drain.stats

@@ -88,6 +88,13 @@ class Ticket:
     submitted_ns: float = 0.0
     started_ns: float = -1.0
     finished_ns: float = -1.0
+    # Optimizer provenance (drain(optimize=True)): the expression as
+    # submitted when the pass rewrote it, whether this ticket is a
+    # synthetic scratch materialization of a shared subtree, and whether
+    # it was served from the result cache without executing.
+    rewritten_from: Optional[E.Expr] = None
+    synthetic: bool = False
+    cache_hit: bool = False
     # Why this query did not land in epoch 0: the packing constraints
     # that bound it (recorded by ``_form_epochs``). Each entry is one of
     # ``dep:#N`` (reads ticket N's result), ``read-after-write:<name>``,
@@ -148,9 +155,18 @@ class DrainReport:
     epochs: List[EpochReport] = dataclasses.field(default_factory=list)
     stats: OpStats = dataclasses.field(default_factory=OpStats)
     serial_ns: float = 0.0
+    # Total bank-busy time: the sum of every drained ticket's summed
+    # per-resource ns. Unlike ``stats.ns`` (epoch maxima) or
+    # ``serial_ns`` (per-ticket maxima), this is pure work with no
+    # packing artifacts - the quantity the optimizer conserves.
+    busy_ns: float = 0.0
     start_ns: float = 0.0           # the drain's ``now_ns``
     end_ns: float = 0.0             # clock after the last epoch
     refresh_stall_ns: float = 0.0
+    # The optimizer's OptReport when this drain ran with optimize=True
+    # (None otherwise): CSE/cache hit counts, placement skips and the
+    # cost-model savings estimate for this drain.
+    opt: Optional[object] = None
 
     @property
     def n_queries(self) -> int:
@@ -174,6 +190,7 @@ class AsyncScheduler:
         self.drains = 0
         self.last_drain: Optional[DrainReport] = None
         self._submitted = 0
+        self._optimizer = None
         # DRAM timing of the backing device(s): drives the refresh-aware
         # drain timeline. None on accelerator stores (no DRAM model - a
         # ``refresh=True`` drain degrades to the plain timeline there).
@@ -183,6 +200,15 @@ class AsyncScheduler:
         else:
             devs = getattr(store, "devices", None) or ()
             self._timing = devs[0].timing if len(devs) else None
+
+    @property
+    def optimizer(self):
+        """The drain-time query optimizer (created lazily on first use;
+        its result cache persists across drains)."""
+        if self._optimizer is None:
+            from .optimizer import QueryOptimizer
+            self._optimizer = QueryOptimizer(self)
+        return self._optimizer
 
     # -- submission ----------------------------------------------------------
 
@@ -275,7 +301,14 @@ class AsyncScheduler:
         ticket contributes its own footprint (its result is co-located
         with its operands by the planner's destination policy)."""
         if id(t) in cache:
-            return cache[id(t)]
+            fp = cache[id(t)]
+            if fp is None:      # re-entered while still computing it
+                raise AmbitError(
+                    f"ticket dependency cycle involving #{t.index} - "
+                    "the ticket DAG is corrupted (submit can only "
+                    "reference earlier tickets)")
+            return fp
+        cache[id(t)] = None     # in-progress marker for cycle detection
         res: set = set()
         for nm in sorted(t.env):
             v = t.env[nm]
@@ -330,6 +363,11 @@ class AsyncScheduler:
                         raise AmbitError(
                             f"operand {nm!r} of ticket #{t.index} is a "
                             f"{v.state} ticket not part of this drain")
+                    if id(v) not in assigned:   # deps precede consumers
+                        raise AmbitError(
+                            f"operand {nm!r} of ticket #{t.index} "
+                            f"(ticket #{v.index}) is not scheduled "
+                            "before its consumer - dependency cycle?")
                     bump(assigned[id(v)] + 1, f"dep:#{v.index}")
                 else:                           # read-after-write
                     bump(last_writer.get(id(v), -1) + 1,
@@ -371,7 +409,8 @@ class AsyncScheduler:
     # -- execution ------------------------------------------------------------
 
     def drain(self, now_ns: float = 0.0, epoch_cost=None,
-              refresh: bool = False) -> List[Ticket]:
+              refresh: bool = False,
+              optimize: bool = False) -> List[Ticket]:
         """Execute every queued query and return the tickets in submit
         order. Execution order IS submit order - epochs only change how
         time is accounted - so energy/AAP ledgers are identical to serial
@@ -392,10 +431,41 @@ class AsyncScheduler:
         stall while the measured epoch ns - and with it every
         conservation invariant - is untouched. The absorbed stall lands
         in ``EpochReport.refresh_ns`` / ``DrainReport.refresh_stall_ns``.
-        No-op on accelerator stores (no DRAM timing model)."""
-        tickets, self.pending = self.pending, []
-        if not tickets:
+        No-op on accelerator stores (no DRAM timing model).
+
+        ``optimize=True`` runs the cost-based query optimizer
+        (``pim.optimizer``) between the queue and epoch formation:
+        cross-ticket CSE materializes shared subtrees once into
+        synthetic scratch tickets, placement-aware gating keeps sharing
+        off when moving the shared chunks would cost more than
+        recomputing, and repeated read-only queries are served from the
+        result cache without executing. Results stay bit-identical to
+        ``optimize=False`` and to serial eval (the differential suites
+        prove it); the rewritten program never charges more device ops
+        than the submitted one. The returned list is always the
+        *submitted* tickets in submit order - synthetic scratch tickets
+        are internal and their results are freed before drain returns.
+        (Distinct from ``AmbitRuntime(optimize=True)``, which toggles
+        the single-program AAP peephole inside the planner.)"""
+        submitted, self.pending = self.pending, []
+        if not submitted:
             return []
+        if optimize:
+            tickets = self.optimizer.rewrite(submitted, now_ns=now_ns)
+        else:
+            tickets = submitted
+        if not tickets:                 # everything served from cache
+            report = DrainReport(start_ns=now_ns, end_ns=now_ns,
+                                 opt=self.optimizer.last_report)
+            self.last_drain = report
+            self.drains += 1
+            m = self.store.metrics
+            m.counter("sched_drains").inc(1)
+            m.counter("sched_queries").inc(len(submitted))
+            self.optimizer.commit(submitted)
+            if self.store.tracer.enabled:
+                self._trace_cache_hits(submitted)
+            return submitted
         consumers: Dict[int, int] = {}      # id(dep ticket) -> # readers
         for t in tickets:
             for v in t.env.values():
@@ -427,10 +497,13 @@ class AsyncScheduler:
                 if u.state == QUEUED:
                     u.state = FAILED if u is current else CANCELLED
                     self._release_ticket_holds(u)
-            raise
+            self._reap_scratch(tickets)     # no scratch handle outlives
+            raise                           # the drain, even on failure
         # accounting: epoch ns = max over resources of summed per-resource
         # ns, plus the epoch's serialized channel transfers
-        report = DrainReport(start_ns=now_ns)
+        report = DrainReport(
+            start_ns=now_ns,
+            opt=self.optimizer.last_report if optimize else None)
         by_index = {t.index: t for t in tickets}
         total = OpStats()
         clock = now_ns
@@ -469,13 +542,17 @@ class AsyncScheduler:
             total.channel_bytes += t.stats.channel_bytes
             total.refresh_stolen_ns += t.stats.refresh_stolen_ns
             report.serial_ns += t.stats.ns
+            report.busy_ns += sum(t.resource_ns.values())
         report.stats = total
         self.last_drain = report
         self.drains += 1
+        if optimize:
+            self._reap_scratch(tickets)
+            self.optimizer.commit(submitted)
         m = self.store.metrics
         m.counter("sched_drains").inc(1)
         m.counter("sched_epochs").inc(len(epochs))
-        m.counter("sched_queries").inc(len(tickets))
+        m.counter("sched_queries").inc(len(submitted))
         if refresh:
             m.counter("sched_refresh_stall_ns").inc(report.refresh_stall_ns)
         for t in tickets:
@@ -484,7 +561,34 @@ class AsyncScheduler:
                 m.counter("sched_deferrals").inc(1, reason=r.split(":")[0])
         if self.store.tracer.enabled:
             self._trace_drain(report, by_index)
-        return tickets
+            if optimize:
+                self._trace_cache_hits(submitted)
+        return submitted
+
+    def _reap_scratch(self, tickets: List[Ticket]) -> None:
+        """Free the results of synthetic scratch tickets: every consumer
+        has executed (or was cancelled) by now and released its hold, so
+        no optimizer-introduced handle outlives the drain. Leak-checked
+        by allocator occupancy in the test suite."""
+        for t in tickets:
+            if not t.synthetic or t.state != DONE or t.result is None:
+                continue
+            if not getattr(t.result, "freed", False):
+                self.store.free(t.result)
+
+    def _trace_cache_hits(self, submitted: List[Ticket]) -> None:
+        """Async ticket spans for cache-served queries (they skip
+        ``_trace_drain``'s by-index loop: they never entered an
+        epoch)."""
+        tr = self.store.tracer
+        for t in submitted:
+            if not t.cache_hit:
+                continue
+            tr.async_begin(("scheduler", "tickets"), f"q#{t.index}",
+                           "ticket", t.index, t.submitted_ns,
+                           args={"cache_hit": True})
+            tr.async_end(("scheduler", "tickets"), f"q#{t.index}",
+                         "ticket", t.index, t.finished_ns)
 
     def _trace_drain(self, report: DrainReport,
                      by_index: Dict[int, Ticket]) -> None:

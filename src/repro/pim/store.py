@@ -177,6 +177,27 @@ class LruSpillBase:
         self.pinned_bytes = 0
         self.pin_budget_bytes: Optional[int] = None
         self._pin_billed: set = set()
+        # Dirty-tracking generations: every mutation of a handle's device
+        # contents that is NOT an ordinary planner write into a fresh
+        # result - ``out=`` rebind, free, spill->fault-in - bumps the
+        # handle's generation and notifies the invalidation hooks. The
+        # optimizer's result cache keys on (canonical expr, operand
+        # generations), so a bumped operand makes stale entries
+        # unreachable and the hook drops them eagerly.
+        self._gen: Dict[int, int] = {}
+        self._invalidation_hooks: List = []
+
+    def generation(self, rbv) -> int:
+        """Monotonic dirty-tracking counter for a handle (0 until its
+        first invalidating mutation)."""
+        return self._gen.get(id(rbv), 0)
+
+    def _invalidate(self, rbv) -> None:
+        """Bump a handle's generation and fan out to registered hooks
+        (the optimizer's result cache)."""
+        self._gen[id(rbv)] = self._gen.get(id(rbv), 0) + 1
+        for hook in self._invalidation_hooks:
+            hook(rbv)
 
     def _charge_io(self, direction: str, cause: str, nbytes: int) -> None:
         """THE accounting site for host<->device channel transfers.
@@ -295,6 +316,12 @@ class LruSpillBase:
 
     def free(self, rbv) -> None:
         self._check_handle(rbv)
+        # Notify BEFORE the held check: the result cache holds the
+        # results (and references the operands) it caches, and dropping
+        # those entries releases the cache's own hold - so a user can
+        # free a handle whose only remaining holder is the cache.
+        if self._invalidation_hooks:
+            self._invalidate(rbv)
         if self.is_held(rbv):
             raise AmbitError(
                 f"cannot free {rbv!r}: a queued query still reads it "
@@ -307,6 +334,7 @@ class LruSpillBase:
         self._unregister(rbv)
         rbv.spilled = False
         rbv._host = None
+        self._gen.pop(id(rbv), None)    # id may be reused after gc
 
     def rebind(self, out, res) -> object:
         """Move a fresh result's storage into an existing destination
@@ -322,6 +350,7 @@ class LruSpillBase:
         out.dirty = True
         out._host = None
         self._register(out)
+        self._invalidate(out)           # out= is a dirty-tracked write
         return out
 
     def _move_storage(self, out, res) -> None:
@@ -549,6 +578,7 @@ class PimStore(LruSpillBase):
         rbv.dirty = False
         self._charge_io("to_device", "fault_in", rbv.device_bytes)
         self._register(rbv)
+        self._invalidate(rbv)   # placement changed: generation bumps
         return rbv
 
     # -- migration planner ---------------------------------------------------
@@ -578,8 +608,10 @@ class PimStore(LruSpillBase):
             best = max(counts.values())
             # plurality target; ties break to the first operand's home
             target = next(h for h in homes if counts[h] == best)
+            seen = set()    # an operand listed twice moves once
             for rbv, h in zip(operands, homes):
-                if h != target:
+                if h != target and id(rbv) not in seen:
+                    seen.add(id(rbv))
                     moves.append((rbv, i, (target[0], target[1], -1)))
         return moves
 

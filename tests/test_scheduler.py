@@ -411,3 +411,110 @@ def test_cancel_releases_holds():
     assert t.state == "cancelled"
     rt.free(a)                                   # holds released
     assert rt.drain() == []
+
+
+# -- optimized drain: rewrite never changes WHAT is computed ------------------
+
+
+def check_optimized_drain_matches_serial(seed, devices):
+    """drain(optimize=True) over a random mix is bit-identical to serial
+    eval AND to drain(optimize=False), with the rewritten program doing
+    no more work (AAPs/energy) than the submitted one."""
+    rng = np.random.default_rng(seed)
+    n_bits = int(rng.integers(1, 600))
+    n_base = int(rng.integers(3, 6))
+    bits = rng.integers(0, 2, (n_base, n_bits)).astype(bool)
+    queries = []
+    for _ in range(int(rng.integers(2, 7))):
+        expr = rand_expr(rng)
+        if expr.op in ("var", "lit"):
+            expr = expr ^ Y
+        queries.append((expr, rng.integers(0, n_base, 3)))
+
+    rt_s = _rt(devices=devices, seed=seed % 5)
+    rt_o = _rt(devices=devices, seed=seed % 5)
+    vs_s = [rt_s.put(BitVector.from_bits(b)) for b in bits]
+    vs_o = [rt_o.put(BitVector.from_bits(b)) for b in bits]
+
+    serial, serial_e, serial_aap = [], 0.0, 0
+    for expr, picks in queries:
+        out = rt_s.eval(expr, {k: vs_s[picks[i]]
+                               for i, k in enumerate("xyz")})
+        serial_e += rt_s.last_stats.energy_nj
+        serial_aap += rt_s.last_stats.aap_count
+        serial.append(np.asarray(rt_s.get(out).bits()))
+
+    tickets = [rt_o.submit(expr, {k: vs_o[picks[i]]
+                                  for i, k in enumerate("xyz")})
+               for expr, picks in queries]
+    assert rt_o.drain(optimize=True) == tickets
+    for t, want in zip(tickets, serial):
+        assert t.state == "done"
+        assert np.array_equal(np.asarray(rt_o.get(t.result).bits()), want)
+    drain = rt_o.last_drain
+    assert drain.opt is not None
+    # work conservation: the rewrite only ever REMOVES device ops
+    assert drain.stats.aap_count <= serial_aap
+    assert drain.stats.energy_nj <= serial_e + 1e-9
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.sampled_from([1, 3]))
+    def test_optimized_drain_matches_serial_random(seed, devices):
+        check_optimized_drain_matches_serial(seed, devices)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(8))
+    @pytest.mark.parametrize("devices", [1, 3])
+    def test_optimized_drain_matches_serial_random(seed, devices):
+        check_optimized_drain_matches_serial(seed, devices)
+
+
+def test_optimized_drain_cse_must_fire():
+    """A mix built to share a subtree MUST report CSE activity (the
+    metric is load-bearing: CI byte-diffs it across hash seeds), while
+    staying bit-identical to the unoptimized drain."""
+    rt_o, rt_u = _rt(), _rt()
+    bits = RNG.integers(0, 2, (3, 256)).astype(bool)
+    exprs = [(X & Y) | Z, (Y & X) ^ Z, ~(X & Y), maj(X & Y, Y, Z)]
+    results = []
+    for rt, opt in ((rt_o, True), (rt_u, False)):
+        vs = [rt.put(BitVector.from_bits(b)) for b in bits]
+        env = {"x": vs[0], "y": vs[1], "z": vs[2]}
+        ts = [rt.submit(e, dict(env)) for e in exprs]
+        rt.drain(optimize=opt)
+        results.append([np.asarray(rt.get(t.result).bits()) for t in ts])
+    for a, b in zip(*results):
+        assert np.array_equal(a, b)
+    rep = rt_o.last_drain.opt
+    assert rep.cse_hits > 0 and rep.cse_materialized >= 1
+    assert rt_o.store.metrics.counter("opt_cse_hits").total() == \
+        rep.cse_hits
+    assert rt_o.last_drain.stats.aap_count < \
+        rt_u.last_drain.stats.aap_count
+
+
+def test_optimized_drain_write_read_interleave_bit_exact():
+    """Adversarial mix for the result cache: a write lands between two
+    structurally-equal reads in ONE drain. The rewrite must neither
+    serve the second read stale nor reorder it before the write."""
+    rt = _rt()
+    bits = RNG.integers(0, 2, (3, 200)).astype(bool)
+    vs = [rt.put(BitVector.from_bits(b)) for b in bits]
+    env = {"x": vs[0], "y": vs[1], "z": vs[2]}
+    r1 = rt.submit((X | Y) & Z, dict(env))
+    w = rt.submit(X ^ Z, {"x": vs[0], "z": vs[2]}, out=vs[1])
+    r2 = rt.submit((Y | X) & Z, dict(env))      # equal modulo commute
+    rt.drain(optimize=True)
+    assert not r1.cache_hit and not r2.cache_hit
+    y_new = bits[0] ^ bits[2]
+    assert np.array_equal(np.asarray(rt.get(r1.result).bits()),
+                          (bits[0] | bits[1]) & bits[2])
+    assert np.array_equal(np.asarray(rt.get(r2.result).bits()),
+                          (bits[0] | y_new) & bits[2])
+    # epoch ordering kept the writer strictly between the readers
+    assert r1.epoch <= w.epoch <= r2.epoch
+    assert r1.epoch < r2.epoch

@@ -14,6 +14,11 @@ no live Tracer/registry needed, so this works on CI artifacts:
   * refresh stall: stolen ns per track from the ``refresh``-category
     spans (the planner's per-bank ``refresh_stall`` ticks and the
     scheduler's ``drain(refresh=True)`` epoch stalls);
+  * query-optimizer activity from the ``opt``-category instants on the
+    ``scheduler/optimizer`` track: rewrite spans per ticket (which
+    ``__cse`` scratch vars each rewritten query now references),
+    materializations (shared-subtree ops x consumer count) and
+    result-cache hits;
   * event counts per category.
 
 ``--json`` emits the same summary as a machine-readable dict (sorted
@@ -49,11 +54,26 @@ def summarise(events, max_batch=None):
     channel_ns = 0.0
     bank_busy = defaultdict(float)
     refresh_stall = defaultdict(float)
+    opt = {"rewrites": 0, "materializations": 0, "cache_hits": 0,
+           "shared_ops": 0, "consumer_refs": 0, "rewritten_tickets": []}
     for e in events:
         ph = e.get("ph")
         if ph == "M":
             continue
         cats[e.get("cat", "?")] += 1
+        if e.get("cat") == "opt" and ph == "i":
+            args = e.get("args", {})
+            name = e.get("name", "")
+            if name.startswith("rewrite#"):
+                opt["rewrites"] += 1
+                opt["rewritten_tickets"].append(
+                    (args.get("ticket"), args.get("cse_vars", [])))
+            elif name.startswith("materialize#"):
+                opt["materializations"] += 1
+                opt["shared_ops"] += args.get("ops", 0)
+                opt["consumer_refs"] += args.get("consumers", 0)
+            elif name.startswith("cache_hit#"):
+                opt["cache_hits"] += 1
         if ph != "X":
             continue
         args = e.get("args", {})
@@ -72,6 +92,18 @@ def summarise(events, max_batch=None):
                                      f"pid{e['pid']}/tid{e['tid']}")] += dur
 
     out = {"event_counts": dict(sorted(cats.items()))}
+    if opt["rewrites"] or opt["materializations"] or opt["cache_hits"]:
+        out["optimizer"] = {
+            "rewrites": opt["rewrites"],
+            "materializations": opt["materializations"],
+            "shared_subtree_ops": opt["shared_ops"],
+            "consumer_refs": opt["consumer_refs"],
+            "cache_hits": opt["cache_hits"],
+            "rewritten_tickets": [
+                {"ticket": t, "cse_vars": v}
+                for t, v in sorted(opt["rewritten_tickets"],
+                                   key=lambda x: (x[0] is None, x[0]))],
+        }
     if refresh_stall:
         out["refresh"] = {
             "total_stolen_ns": sum(refresh_stall.values()),
@@ -129,6 +161,18 @@ def render(summary):
             if "busy_pct" in row:
                 s += f" busy={row['busy_pct']:.1f}%"
             lines.append(s)
+    opt = summary.get("optimizer")
+    if opt:
+        lines.append("== optimizer ==")
+        lines.append(
+            f"rewrites={opt['rewrites']} "
+            f"materializations={opt['materializations']} "
+            f"shared_subtree_ops={opt['shared_subtree_ops']} "
+            f"consumer_refs={opt['consumer_refs']} "
+            f"cache_hits={opt['cache_hits']}")
+        for row in opt["rewritten_tickets"]:
+            refs = " ".join(f"__cse{g}" for g in row["cse_vars"])
+            lines.append(f"ticket#{row['ticket']} -> {refs or '(folded)'}")
     refresh = summary.get("refresh")
     if refresh:
         lines.append("== refresh ==")
