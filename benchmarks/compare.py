@@ -35,6 +35,10 @@ _TOKEN = re.compile(r"([A-Za-z_][\w.]*)=(\S+)")
 # run, not just diffed.
 _REQUIRED_TOKENS = {
     "serve_": ("pack_eff_pct", "bank_busy_pct"),
+    # reliability rows must keep reporting the recovery ledger - a
+    # fault run with no retries/quarantines recorded means the
+    # injection path silently stopped firing
+    "faults_serve_": ("faults", "retries", "quarantined", "mismatches"),
     # optimizer rows must keep reporting CSE/cache reconciliation -
     # losing a counter silently would blind the opt-determinism job
     "kern_pim_optimizer": ("cse_hits", "cse_mat", "cache_hits"),

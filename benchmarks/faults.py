@@ -1,0 +1,143 @@
+"""Reliability benchmarks: the price of surviving faults.
+
+Two questions the reliability layer must answer with numbers:
+
+  * what does TMR protection cost when nothing goes wrong - the 3x
+    storage is by construction, but parity checks and replica-wise
+    execution also tax every query (``faults_tmr_overhead``);
+  * what do retries cost when rows actually fail - the closed-loop
+    Zipfian serving mix re-run under a fixed stuck-row rate, reporting
+    the latency tail shift and the recovery ledger
+    (``faults_serve_r001`` at 0.1%%, ``faults_serve_r010`` at 1%%).
+
+Everything structural (fault counts, retries, quarantined rows, latency
+percentiles, mismatches) is ledger-derived and seed-deterministic, so
+the rows diff bit-exact across machines; wall time lives only in the
+``us`` column. Fault injection uses structural RNG keys, never
+``hash()`` - the same rows come out under any ``PYTHONHASHSEED``.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _counter(rt, name: str) -> int:
+    c = rt.metrics.snapshot()["counters"]
+    return int(sum(v for k, v in c.items()
+                   if k == name or k.startswith(name + "{")))
+
+
+def _tmr_overhead(**rt_kwargs) -> Row:
+    """Fault-free TMR tax: replica-wise execution + parity checks vs the
+    plain path, same query mix, same device shape."""
+    from repro.core import BitVector, Expr
+    from repro.pim.faults import FaultConfig, FaultInjector
+    from repro.pim.runtime import AmbitRuntime
+
+    X, Y = Expr.var("x"), Expr.var("y")
+    rng = np.random.default_rng(0)
+    raw = [rng.integers(0, 2, 512).astype(np.uint8) for _ in range(4)]
+    mism = 0
+    t0 = time.perf_counter()
+    stats = {}
+    for tag, protect in (("plain", False), ("tmr", True)):
+        inj = FaultInjector(FaultConfig(seed=0))    # idle: zero rates
+        rt = AmbitRuntime(fault_injector=inj, **rt_kwargs)
+        up0 = rt.store.bytes_to_device
+        hs = [rt.put(BitVector.from_bits(v), protect=protect)
+              for v in raw]
+        upload = rt.store.bytes_to_device - up0
+        for k in range(12):
+            i, j = k % 4, (k + 1) % 4
+            r = rt.eval(X ^ Y, {"x": hs[i], "y": hs[j]})
+            got = np.asarray(rt.get(r).bits())
+            if not bool((got == (raw[i] ^ raw[j])).all()):
+                mism += 1
+            rt.free(r)
+        stats[tag] = (upload, rt.session_stats.aap_count,
+                      rt.session_stats.ns)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    (up_p, aap_p, ns_p), (up_t, aap_t, ns_t) = stats["plain"], stats["tmr"]
+    derived = (f"storage_x={int(round(up_t / up_p))} "
+               f"aap_plain={aap_p} aap_tmr={aap_t} "
+               f"aap_tax_pct={int(round(100.0 * (aap_t - aap_p) / aap_p))} "
+               f"ns_tax_pct={int(round(100.0 * (ns_t - ns_p) / ns_p))} "
+               f"mismatches={mism}")
+    return "faults_tmr_overhead", wall_us, derived
+
+
+def _serve_faulty(rate: float, n_tenants: int, n_queries: int,
+                  n_users: int, n_items: int, max_batch: int,
+                  window_ns: float, **rt_kwargs) -> Row:
+    """The serve_closed_loop bitmap mix re-run under a fixed stuck-row
+    rate: every completion still bit-exact, the latency tail carries
+    the retry/backoff cost, and the recovery ledger is part of the row."""
+    from repro.core import BitVector, Expr
+    from repro.pim.faults import FaultConfig, FaultInjector
+    from repro.pim.runtime import AmbitRuntime
+    from repro.serve import QueryFrontend, run_closed_loop
+
+    rng = np.random.default_rng(0)
+    inj = FaultInjector(FaultConfig(seed=23, stuck_row_rate=rate))
+    rt = AmbitRuntime(fault_injector=inj, **rt_kwargs)
+    rt.reliability.max_retries = 8
+    raw = {f"m{i}": rng.integers(0, 2, n_users).astype(np.uint8)
+           for i in range(n_items)}
+    hs = {k: rt.put(BitVector.from_bits(v), name=k)
+          for k, v in raw.items()}
+    expr = Expr.var("x") & Expr.var("y")
+    tenants = [f"t{i}" for i in range(n_tenants)]
+    pairs = [(i, j) for i in range(n_items) for j in range(i + 1, n_items)]
+    w = 1.0 / np.arange(1, len(pairs) + 1, dtype=np.float64) ** 1.1
+    pair_of = dict(zip(tenants, (
+        pairs[i] for i in rng.choice(len(pairs), size=n_tenants,
+                                     p=w / w.sum()))))
+    expected = {}
+
+    def next_query(tenant, k):
+        i, j = pair_of[tenant]
+        a, b = f"m{i}", f"m{j}"
+        expected[tenant] = int((raw[a] & raw[b]).sum())
+        return expr, {"x": hs[a], "y": hs[b]}
+
+    mism = 0
+    max_ns = 0.0
+
+    def check(q):
+        nonlocal mism, max_ns
+        if not q.ok or rt.popcount(q.result) != expected[q.tenant]:
+            mism += 1
+        max_ns = max(max_ns, q.latency_ns)
+        rt.free(q.result)
+
+    fe = QueryFrontend(rt, window_ns=window_ns, max_batch=max_batch)
+    t0 = time.perf_counter()
+    done = run_closed_loop(fe, tenants, next_query, n_queries,
+                           on_complete=check)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    rep = fe.report()
+    derived = (f"queries={done} errors={rep.errors} mismatches={mism} "
+               f"faults={_counter(rt, 'fault_injected')} "
+               f"retries={_counter(rt, 'ticket_retries')} "
+               f"quarantined={_counter(rt, 'quarantined_rows')} "
+               f"p50_ns={int(rep.p50_ns)} p99_ns={int(rep.p99_ns)} "
+               f"max_ns={int(max_ns)} qps={rep.qps:.1f}")
+    tag = f"r{int(round(rate * 1000)):03d}"
+    return f"faults_serve_{tag}", wall_us, derived
+
+
+def faults(trace_dir: Optional[str] = None) -> List[Row]:
+    rows: List[Row] = []
+    rows.append(_tmr_overhead(banks=4, subarrays=2, words=2))
+    for rate in (0.001, 0.01):
+        rows.append(_serve_faulty(
+            rate, n_tenants=512, n_queries=1024, n_users=2048,
+            n_items=12, max_batch=16, window_ns=5_000.0,
+            banks=4, subarrays=2, words=2))
+    return rows

@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV. Sections:
   kern_*    Pallas kernel micro + engine roofline model
   refresh_* DRAM timing-rule oracle + refresh-interference model
   serve_*   closed-loop multi-tenant serving (continuous batching)
+  faults_*  reliability: TMR tax + serving under injected faults
   roofline_* / cell_*  dry-run roofline aggregation (SSRoofline)
 
 Machine-readable output: ``--json out.json`` additionally writes every
@@ -33,8 +34,8 @@ import sys
 
 
 def sections(trace_dir=None):
-    from . import (kernels_micro, paper_apps, paper_tables, refresh,
-                   roofline, serve_closed_loop)
+    from . import (faults, kernels_micro, paper_apps, paper_tables,
+                   refresh, roofline, serve_closed_loop)
 
     serve = serve_closed_loop.serve_closed_loop
     if trace_dir is not None:
@@ -53,6 +54,7 @@ def sections(trace_dir=None):
         kernels_micro.kernels_micro,
         refresh.refresh,
         serve,
+        faults.faults,
         roofline.roofline_rows,
     ]
 

@@ -32,7 +32,11 @@ class TMRCodec:
         self.engine = engine
 
     def encode(self, x: BitVector) -> List[BitVector]:
-        return [BitVector(x.data, x.n_bits) for _ in range(self.REPLICAS)]
+        # Each replica gets its OWN storage: aliasing one buffer three
+        # times would let a single underlying flip corrupt all votes,
+        # which defeats the entire point of modular redundancy.
+        return [BitVector(jnp.array(x.data, copy=True), x.n_bits)
+                for _ in range(self.REPLICAS)]
 
     def apply(self, op: str, a: List[BitVector], b: List[BitVector]
               ) -> List[BitVector]:

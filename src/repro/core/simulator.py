@@ -341,6 +341,10 @@ class AmbitDevice:
         from ..obs import NULL_TRACER
         self.tracer = NULL_TRACER
         self.trace_name = "device0"     # track prefix (cluster device idx)
+        # Opt-in fault injection (repro.pim.faults): the runtime wires a
+        # FaultInjector in; row copies and host accesses then consult it.
+        self.fault_injector = None
+        self.device_index = 0
 
     # -- allocator (Section 5.2 driver) --------------------------------------
 
@@ -501,6 +505,9 @@ class AmbitDevice:
         RowClone-PSM, inter-bank over the channel (same latency/energy
         model, charged to the destination bank). Single cost-model site
         for bbop staging and the pim store's migration planner."""
+        inj = self.fault_injector
+        if inj is not None:
+            inj.check_alive(self.device_index)
         sb, ss, sr = src
         db, ds, dr = dst
         bank = self.banks[db]
@@ -516,6 +523,7 @@ class AmbitDevice:
                     (self.trace_name, f"bank{db}", "migrate"),
                     "rowclone_psm", "migrate", dur,
                     args={"src": list(src), "dst": list(dst)})
+            self._post_transfer(dst)
             return
         data = self.banks[sb].subarrays[ss].read_row(sr)
         bank.subarrays[ds].write_row(dr, data)
@@ -528,6 +536,21 @@ class AmbitDevice:
                 (self.trace_name, f"bank{db}", "migrate"),
                 "interbank_copy", "migrate", dur,
                 args={"src": list(src), "dst": list(dst)})
+        self._post_transfer(dst)
+
+    def _post_transfer(self, dst: tuple) -> None:
+        """RowClone fault injection: the copy happened (and was billed);
+        the injector may now corrupt the landed row or declare the
+        destination stuck (write-verify raises)."""
+        inj = self.fault_injector
+        if inj is None:
+            return
+        db, ds, dr = dst
+        sub = self.banks[db].subarrays[ds]
+        row = sub.read_row(dr)
+        out = inj.on_transfer(self.device_index, dst, row)
+        if out is not row:
+            sub.write_row(dr, out)
 
     def _stage_psm(self, db: int, ds: int, src: tuple, scratch: int) -> None:
         """Stage a non-co-located source row into scratch row `scratch` of
@@ -555,11 +578,15 @@ class AmbitDevice:
     # -- convenience ----------------------------------------------------------
 
     def write(self, slots: Sequence[tuple], data: np.ndarray) -> None:
+        if self.fault_injector is not None:
+            self.fault_injector.check_alive(self.device_index)
         data = np.asarray(data, np.uint64).reshape(len(slots), self.words)
         for (b, s, r), row in zip(slots, data):
             self.banks[b].subarrays[s].write_row(r, row)
 
     def read(self, slots: Sequence[tuple]) -> np.ndarray:
+        if self.fault_injector is not None:
+            self.fault_injector.check_alive(self.device_index)
         return np.stack([self.banks[b].subarrays[s].read_row(r)
                          for (b, s, r) in slots])
 

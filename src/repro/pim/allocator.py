@@ -71,6 +71,11 @@ class RowAllocator:
                 self._freed[(b, s)] = []
                 self._occupancy[(b, s)] = 0
         self._live: set = set()
+        # Quarantined slots are retired for the life of the allocator:
+        # never handed out again, subtracted from capacity, and listed
+        # in report() so CI can prove zero leaks (reliability layer).
+        self._quarantined: set = set()
+        self._q_by_sub: Dict[Tuple[int, int], int] = {}
 
     @classmethod
     def for_device(cls, device, scratch_rows: int = 0,
@@ -82,7 +87,8 @@ class RowAllocator:
 
     @property
     def capacity(self) -> int:
-        return self.banks * self.subarrays * self.usable_rows
+        return self.banks * self.subarrays * self.usable_rows \
+            - len(self._quarantined)
 
     @property
     def live(self) -> int:
@@ -109,14 +115,50 @@ class RowAllocator:
         return self._occupancy[(bank, subarray)]
 
     def subarray_free(self, bank: int, subarray: int) -> int:
-        return self.usable_rows - self._occupancy[(bank, subarray)]
+        return self.usable_rows - self._occupancy[(bank, subarray)] \
+            - self._q_by_sub.get((bank, subarray), 0)
 
     def is_live(self, slot: Slot) -> bool:
         return tuple(slot) in self._live
 
+    @property
+    def quarantined(self) -> int:
+        return len(self._quarantined)
+
+    @property
+    def quarantined_slots(self) -> frozenset:
+        return frozenset(self._quarantined)
+
+    def report(self) -> dict:
+        """Accounting snapshot: every retired row must appear here (the
+        chaos CI job asserts quarantine never leaks slots)."""
+        return {
+            "capacity": self.capacity,
+            "live": self.live,
+            "free": self.free_slots,
+            "quarantined": len(self._quarantined),
+            "quarantined_slots": sorted(self._quarantined),
+        }
+
     # -- allocation ----------------------------------------------------------
 
+    def _purge_quarantined(self, key: Tuple[int, int]) -> None:
+        """Drop retired rows from the subarray's free structures: pop
+        them off the freed heap and step the virgin cursor over them
+        (lazily, so quarantine stays O(1))."""
+        if not self._quarantined:
+            return
+        freed = self._freed[key]
+        while freed and (key[0], key[1], freed[0]) in self._quarantined:
+            heapq.heappop(freed)
+        v = self._virgin[key]
+        while v < self.usable_rows \
+                and (key[0], key[1], v) in self._quarantined:
+            v += 1
+        self._virgin[key] = v
+
     def _lowest_free_row(self, key: Tuple[int, int]) -> Optional[int]:
+        self._purge_quarantined(key)
         freed = self._freed[key]
         virgin = self._virgin[key]
         if freed:
@@ -126,6 +168,7 @@ class RowAllocator:
 
     def _take_row(self, key: Tuple[int, int]) -> int:
         """Pop the lowest free row of a subarray (caller checked non-full)."""
+        self._purge_quarantined(key)
         freed = self._freed[key]
         virgin = self._virgin[key]
         if freed and (virgin >= self.usable_rows or freed[0] < virgin):
@@ -212,3 +255,24 @@ class RowAllocator:
             b, s, r = slot
             heapq.heappush(self._freed[(b, s)], r)
             self._occupancy[(b, s)] -= 1
+
+    # -- quarantine ----------------------------------------------------------
+
+    def quarantine(self, slots: Iterable[Slot]) -> None:
+        """Retire faulty rows permanently (the reliability layer's
+        re-placement contract: a quarantined row is never allocated
+        again). Live slots must be freed first; repeats are no-ops."""
+        for slot in slots:
+            slot = tuple(slot)
+            b, s, r = slot
+            if not (0 <= b < self.banks and 0 <= s < self.subarrays
+                    and 0 <= r < self.usable_rows):
+                raise AmbitError(
+                    f"cannot quarantine non-allocatable slot {slot}")
+            if slot in self._live:
+                raise AmbitError(
+                    f"cannot quarantine live slot {slot} (free it first)")
+            if slot in self._quarantined:
+                continue
+            self._quarantined.add(slot)
+            self._q_by_sub[(b, s)] = self._q_by_sub.get((b, s), 0) + 1

@@ -56,6 +56,7 @@ from ..core.simulator import AmbitDevice, AmbitError
 from ..core.geometry import DEFAULT_GEOMETRY, DRAMGeometry
 from ..core.timing import DEFAULT_TIMING, CommandStats, TimingParams
 from .allocator import STRIPED, Slot
+from .faults import DeviceLostError
 from .planner import QueryPlanner
 from .store import (LruSpillBase, PimStore, ResidentBitVector, chunk_rows,
                     unchunk_rows)
@@ -167,6 +168,14 @@ class ClusterBitVector:
     _host: Optional[BitVector] = None
     # chunk index -> (words,) uint64 row for dirty partially-spilled chunks
     _stash: Dict[int, np.ndarray] = dataclasses.field(default_factory=dict)
+    # TMR protection (repro.pim.faults): a protected primary carries two
+    # independently-placed replica planes; ``lost`` marks a handle whose
+    # only copy of some chunk died with its device - every use short of
+    # free/plane-repair raises a data-loss FaultError.
+    protected: bool = False
+    replicas: List["ClusterBitVector"] = dataclasses.field(
+        default_factory=list)
+    lost: bool = False
 
     @property
     def n_slots(self) -> int:
@@ -274,6 +283,9 @@ class PimCluster(LruSpillBase):
         self.bytes_to_device = 0
         self.bytes_from_device = 0
         self._lru_init()
+        # Devices taken offline by the reliability layer: excluded from
+        # placement, guarded in _alloc_on, populated by evacuate_device.
+        self.dead_devices: set = set()
         # Operands of an in-flight ClusterPlanner call: protected from
         # eviction for its duration (set by ClusterPlanner.execute).
         self._in_flight: Tuple[ClusterBitVector, ...] = ()
@@ -302,28 +314,45 @@ class PimCluster(LruSpillBase):
     # -- placement -----------------------------------------------------------
 
     def _place(self, n_chunks: int, placement: Optional[str],
-               near: Optional[Sequence[DeviceSlot]]) -> List[int]:
-        """chunk index -> device index, deterministically."""
+               near: Optional[Sequence[DeviceSlot]],
+               rotate: int = 0) -> List[int]:
+        """chunk index -> device index, deterministically.
+
+        Only devices still alive participate; ``rotate`` offsets the
+        alive-device ordering so TMR replica planes shard onto staggered
+        devices (chunk i of plane k lands k devices over - a single
+        device loss then never takes out the same chunk of two planes).
+        With no dead devices and ``rotate=0`` this reproduces the
+        original placement exactly."""
         placement = self.placement if placement is None else placement
         if placement not in CLUSTER_POLICIES:
             raise ValueError(f"unknown placement {placement!r}")
-        if near is not None and len(near) == n_chunks:
+        alive = [d for d in range(self.n_devices)
+                 if d not in self.dead_devices]
+        if not alive:
+            raise DeviceLostError("every cluster device is offline")
+        r = rotate % len(alive)
+        alive = alive[r:] + alive[:r]
+        if near is not None and len(near) == n_chunks and \
+                all(ds is not None and ds[0] not in self.dead_devices
+                    for ds in near):
             # chunk-aligned affinity: chunk k shares its neighbor's device
             return [d for d, _ in near]
         if placement == ROUND_ROBIN:
-            return [i % self.n_devices for i in range(n_chunks)]
+            return [alive[i % len(alive)] for i in range(n_chunks)]
         if placement == PACKED:
-            free = [a.free_slots for a in self.allocators]
+            free = {d: self.allocators[d].free_slots for d in alive}
             out = []
             for _ in range(n_chunks):
-                d = next((i for i, f in enumerate(free) if f > 0), 0)
+                d = next((i for i in alive if free[i] > 0), alive[0])
                 free[d] -= 1
                 out.append(d)
             return out
         # AFFINITY without a neighbor: whole vector on the least-loaded
         # device, so vectors put near= each other later share it.
-        d = min(range(self.n_devices),
-                key=lambda i: (self.allocators[i].utilization, i))
+        d = min(alive,
+                key=lambda i: (self.allocators[i].utilization,
+                               alive.index(i)))
         return [d] * n_chunks
 
     # -- LRU / eviction (machinery in LruSpillBase) ---------------------------
@@ -403,9 +432,44 @@ class PimCluster(LruSpillBase):
             cbv.slots[i] = None
         # still owns rows elsewhere: stays registered in the LRU
 
+    def evacuate_device(self, d: int) -> None:
+        """Take device ``d`` out of service after a whole-device failure.
+
+        Every registered handle loses its device-``d`` chunks (their
+        rows are gone - nothing is read back). Chunks with a current
+        host/stash copy stay recoverable: ``ensure_resident`` faults
+        them back in on the survivors for the usual ledger price. A
+        dirty chunk whose only copy died marks the handle ``lost`` -
+        only a TMR sibling repair (``_repair_plane``) or ``free`` may
+        touch it again. Idempotent."""
+        if d in self.dead_devices:
+            return
+        self.dead_devices.add(d)
+        evacuated = 0
+        for cbv in list(self._lru.values()):
+            idxs = [i for i, ds in enumerate(cbv.slots)
+                    if ds is not None and ds[0] == d]
+            if not idxs:
+                continue
+            self.allocators[d].free([cbv.slots[i][1] for i in idxs])
+            for i in idxs:
+                cbv.slots[i] = None
+            if (cbv.dirty or cbv._host is None) and \
+                    any(i not in cbv._stash for i in idxs):
+                cbv.lost = True
+            evacuated += len(idxs)
+            self._invalidate(cbv)   # placement changed: generation bumps
+        if evacuated:
+            self.metrics.counter("fault_evacuated_chunks").inc(evacuated)
+        if self.tracer.enabled:
+            self.tracer.instant(("faults", f"device{d}"), "evacuate",
+                                "fault", args={"chunks": evacuated})
+
     def _alloc_on(self, d: int, n_rows: int,
                   near: Optional[Sequence[Slot]] = None,
                   protect: Iterable[ClusterBitVector] = ()) -> List[Slot]:
+        if d in self.dead_devices:
+            raise DeviceLostError(f"device {d} is offline", device=d)
         alloc = self.allocators[d]
         while alloc.shortfall(n_rows):
             if not self._evict_one(d, protect):
@@ -420,11 +484,12 @@ class PimCluster(LruSpillBase):
     def put(self, bv: BitVector, placement: Optional[str] = None,
             near: Optional[Sequence[DeviceSlot]] = None,
             name: Optional[str] = None,
-            pin: bool = False) -> ClusterBitVector:
+            pin: bool = False, protect: bool = False,
+            _rotate: int = 0) -> ClusterBitVector:
         chunks = chunk_rows(bv, self.words)
         if len(chunks) == 0:
             raise AmbitError("cannot make a zero-row bitvector resident")
-        devmap = self._place(len(chunks), placement, near)
+        devmap = self._place(len(chunks), placement, near, rotate=_rotate)
         aligned = near is not None and len(near) == len(chunks)
         slots: List[Optional[DeviceSlot]] = [None] * len(chunks)
         try:
@@ -461,6 +526,21 @@ class PimCluster(LruSpillBase):
             except AmbitError:          # over budget: undo the upload
                 self.free(cbv)
                 raise
+        if protect:
+            # TMR encode-on-put: two more honestly-uploaded planes, each
+            # sharded with a rotated chunk->device map so one device loss
+            # never claims the same chunk of two planes (that chunk stays
+            # repairable from a surviving sibling via _repair_plane).
+            try:
+                for k in (1, 2):
+                    cbv.replicas.append(self.put(
+                        bv, placement=placement, pin=pin,
+                        name=f"{name}/plane{k}" if name else None,
+                        _rotate=k))
+            except AmbitError:
+                self.free(cbv)
+                raise
+            cbv.protected = True
         return cbv
 
     def _read_back(self, cbv: ClusterBitVector) -> BitVector:
@@ -613,8 +693,21 @@ class PimCluster(LruSpillBase):
             (new_slot,) = self._alloc_on(
                 target, 1, near=[anchor] if anchor else None,
                 protect=operands)
-            data = self.devices[src_d].read([src_slot])
-            self.devices[target].write([new_slot], data)
+            try:
+                data = self.devices[src_d].read([src_slot])
+                self.devices[target].write([new_slot], data)
+                inj = getattr(self.devices[target], "fault_injector", None)
+                if inj is not None:
+                    row = data.reshape(self.words)
+                    out = inj.on_transfer(target, new_slot, row)
+                    if out is not row:
+                        self.devices[target].write([new_slot],
+                                                   out.reshape(1, -1))
+            except AmbitError:
+                # landing row is stuck / a device died mid-hop: give the
+                # fresh slot back so retry re-placement starts clean
+                self.allocators[target].free([new_slot])
+                raise
             self.allocators[src_d].free([src_slot])
             cbv.slots[i] = (target, new_slot)
             anchor = anchor or new_slot
@@ -655,6 +748,10 @@ class ClusterReport:
     transfer_ns: float = 0.0
     transfer_bytes: int = 0
     stats: OpStats = dataclasses.field(default_factory=OpStats)
+    #: the execution faulted partway: this report bills only the work
+    #: actually done before the raise (the reliability layer absorbs it
+    #: into the retrying query's accumulator).
+    partial: bool = False
 
 
 class ClusterPlanner:
@@ -692,6 +789,7 @@ class ClusterPlanner:
                 env: Dict[str, ClusterBitVector],
                 out_name: Optional[str] = None) -> ClusterBitVector:
         cl = self.cluster
+        self.last_report = None
         if not env:
             raise ValueError("planner needs at least one operand")
         names = sorted(env)
@@ -710,24 +808,24 @@ class ClusterPlanner:
         dst: List[Optional[DeviceSlot]] = [None] * first.n_slots
         dev_stats: Dict[int, OpStats] = {}
         cl._in_flight = tuple(operands)     # no eviction of operands
+        led = cl.ledger
+        rows0, ns0, bytes0, nj0 = (led.inter_device_rows,
+                                   led.inter_device_ns,
+                                   led.inter_device_bytes,
+                                   led.inter_device_nj)
         try:
-            led = cl.ledger
-            rows0, ns0, bytes0, nj0 = (led.inter_device_rows,
-                                       led.inter_device_ns,
-                                       led.inter_device_bytes,
-                                       led.inter_device_nj)
-            if len(operands) > 1:
-                cl.colocate(operands)
-            report.transferred_rows = led.inter_device_rows - rows0
-            report.transfer_ns = led.inter_device_ns - ns0
-            report.transfer_bytes = led.inter_device_bytes - bytes0
-            transfer_nj = led.inter_device_nj - nj0
-
-            by_dev: Dict[int, List[int]] = {}
-            for i in range(first.n_slots):
-                by_dev.setdefault(operands[0].slots[i][0], []).append(i)
-
             try:
+                if len(operands) > 1:
+                    cl.colocate(operands)
+                report.transferred_rows = led.inter_device_rows - rows0
+                report.transfer_ns = led.inter_device_ns - ns0
+                report.transfer_bytes = led.inter_device_bytes - bytes0
+                transfer_nj = led.inter_device_nj - nj0
+
+                by_dev: Dict[int, List[int]] = {}
+                for i in range(first.n_slots):
+                    by_dev.setdefault(operands[0].slots[i][0], []).append(i)
+
                 for d in sorted(by_dev):
                     idxs = by_dev[d]
                     # Names bound to the same handle must share ONE view:
@@ -740,18 +838,26 @@ class ClusterPlanner:
                         if key not in views:
                             views[key] = self._subview(env[nm], d, idxs)
                         sub_env[nm] = views[key]
-                    res = cl.planners[d].execute(expression, sub_env)
+                    try:
+                        res = cl.planners[d].execute(expression, sub_env)
+                    finally:
+                        # Per-device colocation may have moved operand
+                        # rows within the device - even on a faulted
+                        # attempt, where the moves that completed are
+                        # real. Write the sub-view slots back either
+                        # way or a retry frees stale rows.
+                        for nm in names:
+                            sv = sub_env[nm]
+                            for k, i in enumerate(idxs):
+                                if k < len(sv.slots) and \
+                                        sv.slots[k] is not None:
+                                    env[nm].slots[i] = (d, sv.slots[k])
                     cl.stores[d].disown(res)
-                    # Per-device colocation may have moved operand rows
-                    # within the device: write the sub-view slots back.
-                    for nm in names:
-                        sv = sub_env[nm]
-                        for k, i in enumerate(idxs):
-                            env[nm].slots[i] = (d, sv.slots[k])
                     for k, i in enumerate(idxs):
                         dst[i] = (d, res.slots[k])
                     res.slots = []  # ownership moves to the cluster handle
                     sub_rep = cl.planners[d].last_report
+                    sub_rep._cluster_absorbed = True
                     dev_stats[d] = sub_rep.stats
                     for b, st in sub_rep.per_bank.items():
                         report.per_bank[(d, b)] = st
@@ -759,10 +865,45 @@ class ClusterPlanner:
                 for ds in dst:
                     if ds is not None:
                         cl.allocators[ds[0]].free([ds[1]])
+                # Bill the work the fault interrupted: transfers already
+                # on the wire plus the faulting device's own partial
+                # sub-report (its planner frees the device rows; the
+                # cost survives). The retry loop absorbs this report.
+                report.transferred_rows = led.inter_device_rows - rows0
+                report.transfer_ns = led.inter_device_ns - ns0
+                report.transfer_bytes = led.inter_device_bytes - bytes0
+                transfer_nj = led.inter_device_nj - nj0
+                for d in range(cl.n_devices):
+                    rep = cl.planners[d].last_report
+                    if rep is not None and rep.partial and \
+                            not getattr(rep, "_cluster_absorbed", False):
+                        rep._cluster_absorbed = True
+                        dev_stats[d] = rep.stats
+                        for b, st in rep.per_bank.items():
+                            report.per_bank[(d, b)] = st
+                self._finalize(report, dev_stats, transfer_nj,
+                               partial=True)
                 raise
         finally:
             cl._in_flight = ()
 
+        self._finalize(report, dev_stats, transfer_nj, partial=False)
+
+        out = ClusterBitVector(
+            cluster=cl, n_bits=first.n_bits, shape=first.shape,
+            words32=first.words32, chunks=first.chunks, slots=dst,
+            dirty=True, name=out_name)
+        cl._register(out)
+        return out
+
+    def _finalize(self, report: ClusterReport,
+                  dev_stats: Dict[int, OpStats], transfer_nj: float,
+                  partial: bool) -> None:
+        """Roll per-device sub-reports into the cluster report, publish
+        it as ``last_report`` and emit the metrics/trace events. Shared
+        by the success path and the partial (faulted) path so recovery
+        costs hit the same ledgers as normal work."""
+        cl = self.cluster
         report.per_device_ns = {d: st.ns for d, st in dev_stats.items()
                                 if st.ns > 0.0}
         report.stats = OpStats(
@@ -776,6 +917,7 @@ class ClusterPlanner:
             channel_bytes=report.transfer_bytes,
             refresh_stolen_ns=sum(st.refresh_stolen_ns
                                   for st in dev_stats.values()))
+        report.partial = partial
         self.last_report = report
 
         # Per-(device,bank) busy time is the occupancy signal the
@@ -783,7 +925,10 @@ class ClusterPlanner:
         # here (not in the per-device QueryPlanners, whose registries
         # are private to their stores) so each bank-ns is billed once.
         m = cl.metrics
-        m.counter("plan_executions").inc(1)
+        if partial:
+            m.counter("plan_faulted").inc(1)
+        else:
+            m.counter("plan_executions").inc(1)
         for (d, b) in sorted(report.per_bank):
             st = report.per_bank[(d, b)]
             if st.ns:
@@ -792,18 +937,14 @@ class ClusterPlanner:
                 m.counter("refresh_stolen_ns").inc(
                     st.refresh_stolen_ns, device=d, bank=b)
         if cl.tracer.enabled:
+            args = {"devices": len(report.per_device_ns),
+                    "transfer_rows": report.transferred_rows,
+                    "aaps": report.stats.aap_count}
+            if partial:
+                args["partial"] = True
             cl.tracer.tick(
                 ("planner", "cluster"), "plan", "plan", report.stats.ns,
-                args={"devices": len(report.per_device_ns),
-                      "transfer_rows": report.transferred_rows,
-                      "aaps": report.stats.aap_count})
-
-        out = ClusterBitVector(
-            cluster=cl, n_bits=first.n_bits, shape=first.shape,
-            words32=first.words32, chunks=first.chunks, slots=dst,
-            dirty=True, name=out_name)
-        cl._register(out)
-        return out
+                args=args)
 
     def _subview(self, cbv: ClusterBitVector, d: int,
                  idxs: List[int]) -> ResidentBitVector:

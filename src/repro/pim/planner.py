@@ -50,6 +50,10 @@ class PlanReport:
     staged_rows: int = 0            # scratch stagings at execution time
     per_bank: Dict[int, OpStats] = dataclasses.field(default_factory=dict)
     stats: OpStats = dataclasses.field(default_factory=OpStats)
+    #: the call raised mid-execution (fault injection): the report holds
+    #: the cost of the work that DID happen, and no result was adopted -
+    #: the reliability layer absorbs it so retries bill honestly.
+    partial: bool = False
 
     @property
     def per_bank_ns(self) -> Dict[int, float]:
@@ -117,24 +121,25 @@ class QueryPlanner:
                 out_name: Optional[str] = None) -> ResidentBitVector:
         """Evaluate ``expression`` over resident operands; the result stays
         resident (dirty). Appears in ``last_report`` with per-bank timing."""
+        self.last_report = None
         names, first = self._validate(env)
         dev = self.store.device
         geom, timing = dev.geom, dev.timing
         report = PlanReport()
         before = self._bank_totals()
 
-        operands = [env[nm] for nm in names]
-        for rbv in operands:
-            self.store._touch(rbv)      # in-use: refresh LRU recency
-        if self.colocate and len(operands) > 1:
-            report.migrated_rows = self.store.colocate(operands)
-
-        # Destination rows co-located with their chunk's operands. The
-        # fallback path may LRU-spill bystanders on a full device, but the
-        # call's own operands are protected for the duration. Roll back on
-        # device-full so failed evals never leak live rows.
         dst_slots: List[tuple] = []
         try:
+            operands = [env[nm] for nm in names]
+            for rbv in operands:
+                self.store._touch(rbv)  # in-use: refresh LRU recency
+            if self.colocate and len(operands) > 1:
+                report.migrated_rows = self.store.colocate(operands)
+
+            # Destination rows co-located with their chunk's operands.
+            # The fallback path may LRU-spill bystanders on a full
+            # device, but the call's own operands are protected for the
+            # duration.
             for i in range(first.n_slots):
                 hb, hs, _ = operands[0].slots[i]
                 try:
@@ -144,36 +149,67 @@ class QueryPlanner:
                         1, near=[r.slots[i] for r in operands],
                         protect=operands)
                 dst_slots.append(slot)
+
+            compiled = _compile_cached(expression, tuple(names),
+                                       self.optimize, geom.data_rows,
+                                       timing)
+            dst_row = len(names)
+
+            # Group chunk indices by destination subarray; each group is
+            # one batched program execution charged to that subarray's
+            # ledger.
+            groups: Dict[Tuple[int, int], List[int]] = {}
+            for i, (b, s, _) in enumerate(dst_slots):
+                groups.setdefault((b, s), []).append(i)
+
+            inj = getattr(dev, "fault_injector", None)
+            dev_idx = getattr(dev, "device_index", 0)
+            for (gb, gs), idxs in sorted(groups.items()):
+                sub = dev.banks[gb].subarrays[gs]
+                n = len(idxs)
+                batch = AmbitSubarray(geom, timing, words=dev.words,
+                                      n_rows=n)
+                for vi, nm in enumerate(names):
+                    rows = np.empty((n, dev.words), np.uint64)
+                    for gi, i in enumerate(idxs):
+                        rows[gi] = self._fetch(env[nm].slots[i], gb, gs,
+                                               report)
+                    batch.write_row(vi, rows)
+                batch.run(compiled.program)
+                # the TRAs already ran: bill the batch before the
+                # scatter, so an injected fault can't lose their cost
+                sub.stats.merge(batch.stats)
+                out = batch.read_row(dst_row).reshape(n, dev.words)
+                for gi, i in enumerate(idxs):
+                    row = out[gi]
+                    if inj is not None:
+                        row = inj.on_compute_write(
+                            dev_idx, dst_slots[i], row)
+                    sub.write_row(dst_slots[i][2], row)
+                report.groups += 1
         except AmbitError:
-            self.store.allocator.free(dst_slots)
+            # Failed evals never leak live rows, and the work already
+            # performed (stagings, TRAs, partial scatters) stays billed
+            # via a partial report the reliability layer absorbs.
+            if dst_slots:
+                self.store.allocator.free(dst_slots)
+            self._finalize(report, before, partial=True)
             raise
 
-        compiled = _compile_cached(expression, tuple(names), self.optimize,
-                                   geom.data_rows, timing)
-        dst_row = len(names)
+        self._finalize(report, before, partial=False)
+        return self.store.adopt(ResidentBitVector(
+            store=self.store, n_bits=first.n_bits, shape=first.shape,
+            words32=first.words32, chunks=first.chunks, slots=dst_slots,
+            dirty=True, name=out_name))
 
-        # Group chunk indices by destination subarray; each group is one
-        # batched program execution charged to that subarray's ledger.
-        groups: Dict[Tuple[int, int], List[int]] = {}
-        for i, (b, s, _) in enumerate(dst_slots):
-            groups.setdefault((b, s), []).append(i)
-
-        for (gb, gs), idxs in sorted(groups.items()):
-            sub = dev.banks[gb].subarrays[gs]
-            n = len(idxs)
-            batch = AmbitSubarray(geom, timing, words=dev.words, n_rows=n)
-            for vi, nm in enumerate(names):
-                rows = np.empty((n, dev.words), np.uint64)
-                for gi, i in enumerate(idxs):
-                    rows[gi] = self._fetch(env[nm].slots[i], gb, gs, report)
-                batch.write_row(vi, rows)
-            batch.run(compiled.program)
-            out = batch.read_row(dst_row).reshape(n, dev.words)
-            for gi, i in enumerate(idxs):
-                sub.write_row(dst_slots[i][2], out[gi])
-            sub.stats.merge(batch.stats)
-            report.groups += 1
-
+    def _finalize(self, report: PlanReport, before: Dict[int, CommandStats],
+                  partial: bool) -> None:
+        """Close out one execution attempt: compute the per-bank ledger
+        delta, publish ``last_report`` and bill the metric/trace series.
+        Runs for failed (partial) attempts too - injected faults must
+        not leak unbilled DRAM work."""
+        dev = self.store.device
+        timing = dev.timing
         after = self._bank_totals()
         deltas = {bi: _delta(after[bi], before[bi]) for bi in after}
         # Refresh interference: every ns of bank-busy time drags
@@ -194,6 +230,7 @@ class QueryPlanner:
             bytes_touched=0,        # resident: no host traffic
             refresh_stolen_ns=sum(
                 st.refresh_stolen_ns for st in report.per_bank.values()))
+        report.partial = partial
         self.last_report = report
 
         # Observability: per-bank busy ns is the occupancy series the
@@ -202,8 +239,12 @@ class QueryPlanner:
         # per-device store's private registry while the ClusterPlanner
         # bills the shared one with real device indices.
         m = self.store.metrics
-        m.counter("plan_executions").inc(1)
-        m.counter("plan_groups").inc(report.groups)
+        if partial:
+            m.counter("plan_faulted").inc(1)
+        else:
+            m.counter("plan_executions").inc(1)
+        if report.groups:
+            m.counter("plan_groups").inc(report.groups)
         if report.staged_rows:
             m.counter("plan_staged_rows").inc(report.staged_rows)
         for b in sorted(report.per_bank):
@@ -215,11 +256,14 @@ class QueryPlanner:
                     st.refresh_stolen_ns, device=0, bank=b)
         tr = self.store.tracer
         if tr.enabled:
+            args = {"groups": report.groups,
+                    "migrated_rows": report.migrated_rows,
+                    "staged_rows": report.staged_rows,
+                    "aaps": report.stats.aap_count}
+            if partial:
+                args["partial"] = True
             tr.tick(("planner", "device0"), "plan", "plan", report.stats.ns,
-                    args={"groups": report.groups,
-                          "migrated_rows": report.migrated_rows,
-                          "staged_rows": report.staged_rows,
-                          "aaps": report.stats.aap_count})
+                    args=args)
         # Per-bank refresh-stall spans go through the DEVICE tracer: under
         # a cluster the runtime threads the session tracer + a
         # ``device<d>`` trace_name onto each AmbitDevice (the per-device
@@ -234,11 +278,6 @@ class QueryPlanner:
                     dtr.tick((dev_track, f"bank{b}"), "refresh_stall",
                              "refresh", st.refresh_stolen_ns,
                              args={"busy_ns": st.ns})
-
-        return self.store.adopt(ResidentBitVector(
-            store=self.store, n_bits=first.n_bits, shape=first.shape,
-            words32=first.words32, chunks=first.chunks, slots=dst_slots,
-            dirty=True, name=out_name))
 
     def _fetch(self, src: tuple, gb: int, gs: int,
                report: PlanReport) -> np.ndarray:

@@ -30,19 +30,22 @@ transparently at eval time; the re-upload is charged to the call.
 
 from __future__ import annotations
 
+import os
 from typing import Dict, Optional
 
 from ..core import expr as E
 from ..core.bitvector import BitVector
 from ..core.engine import OpStats, binop_expr
 from ..core.geometry import DEFAULT_GEOMETRY, DRAMGeometry
-from ..core.simulator import AmbitDevice
+from ..core.simulator import AmbitDevice, AmbitError
 from ..core.timing import DEFAULT_TIMING, TimingParams
 from ..obs import NULL_TRACER, MetricsRegistry, Tracer
 from .allocator import STRIPED
 from .cluster import (ChannelModel, ClusterBitVector, PimCluster,
                       ROUND_ROBIN)
 from .device_store import DeviceBitVector, DevicePlanner, DeviceStore
+from .faults import (FaultConfig, FaultInjector, ReliabilityManager,
+                     _new_acc)
 from .planner import QueryPlanner
 from .scheduler import AsyncScheduler, DrainReport, Ticket
 from .store import PimStore, ResidentBitVector
@@ -74,9 +77,15 @@ class AmbitRuntime:
                  capacity_bytes: Optional[int] = None,
                  pin_budget_bytes: Optional[int] = None,
                  tracer: Optional[Tracer] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 fault_injector: Optional[FaultInjector] = None):
         if backend not in ("ambit_sim", "jnp", "pallas"):
             raise ValueError(backend)
+        if fault_injector is not None and backend != "ambit_sim":
+            raise ValueError(
+                "fault injection models the DRAM device "
+                "(backend='ambit_sim'); accelerator backends have no "
+                "row-level fault surface")
         self.backend = backend
         if backend != "ambit_sim":
             if devices > 1:
@@ -134,20 +143,63 @@ class AmbitRuntime:
                 dev.trace_name = f"device{d}"
         elif self.device is not None:
             self.device.tracer = self.tracer
+        # Reliability (repro.pim.faults): an explicit injector, or the
+        # chaos-CI env hook PIM_CHAOS_RATE / PIM_CHAOS_SEED. The env
+        # hook injects stuck rows ONLY - detectable, positional,
+        # deterministically recoverable faults - so a chaos run's
+        # results stay bit-exact with the fault-free suite while every
+        # retry/quarantine path gets exercised.
+        self.fault_injector = fault_injector
+        if backend == "ambit_sim" and self.fault_injector is None:
+            rate = float(os.environ.get("PIM_CHAOS_RATE", "0") or 0)
+            if rate > 0.0:
+                self.fault_injector = FaultInjector(FaultConfig(
+                    seed=int(os.environ.get("PIM_CHAOS_SEED", "0") or 0),
+                    stuck_row_rate=rate))
+        self.reliability: Optional[ReliabilityManager] = None
+        if backend == "ambit_sim":
+            inj = self.fault_injector
+            if inj is not None:
+                inj.bind(metrics=self.metrics, tracer=self.tracer,
+                         data_rows=self.device.geom.data_rows)
+                if self.cluster is not None:
+                    for d, dev in enumerate(self.cluster.devices):
+                        dev.fault_injector = inj
+                        dev.device_index = d
+                else:
+                    self.device.fault_injector = inj
+                    self.device.device_index = 0
+            self.reliability = ReliabilityManager(
+                self.store, self.planner, injector=inj,
+                cluster=self.cluster)
+            self.scheduler.reliability = self.reliability
         # Session-simulated clock: advanced by every call's modeled ns.
         self.clock_ns = 0.0
 
     # -- lifecycle -----------------------------------------------------------
 
     def put(self, bv: BitVector, name: Optional[str] = None,
-            near=None, pin: bool = False):
-        before = self.store.bytes_from_device
-        rbv = self.store.put(bv, near=near, name=name, pin=pin)
-        # A full device LRU-spills victims; dirty ones were read back
-        # through the ledger - charge that traffic to this call too.
-        spill_bytes = self.store.bytes_from_device - before
+            near=None, pin: bool = False, protect: bool = False):
+        """Upload a bitvector. ``protect=True`` stores it TMR-encoded
+        (three independently-placed planes, Section 5.5): queries over
+        it execute replica-wise with parity checks and majority-vote
+        scrubbing - 3x the storage and upload bytes, billed honestly."""
+        up0 = self.store.bytes_to_device
+        rd0 = self.store.bytes_from_device
+        kwargs = {}
+        if protect:
+            if self.backend != "ambit_sim":
+                raise ValueError(
+                    "protect=True (TMR planes) requires backend="
+                    "'ambit_sim' - the accelerator stores have no "
+                    "row-level fault model to protect against")
+            kwargs["protect"] = True
+        rbv = self.store.put(bv, near=near, name=name, pin=pin, **kwargs)
+        # Upload bytes for every plane, plus read-backs of dirty victims
+        # a full device LRU-spilled to make room: all this call's traffic.
         self._account(OpStats(
-            bytes_touched=rbv.device_bytes + spill_bytes))
+            bytes_touched=(self.store.bytes_to_device - up0)
+            + (self.store.bytes_from_device - rd0)))
         return rbv
 
     def get(self, rbv) -> BitVector:
@@ -191,6 +243,29 @@ class AmbitRuntime:
         operands = list(env.values())
         up_before = self.store.bytes_to_device
         rd_before = self.store.bytes_from_device
+        if self.reliability is not None:
+            # Full recovery path: bounded retry + quarantine on injected
+            # faults, replica-wise TMR execution for protected operands.
+            # Failed attempts' DRAM work is accounted even when the
+            # query ultimately raises - the ledgers own failed work too.
+            if out is not None and any(getattr(v, "protected", False)
+                                       for v in operands):
+                raise AmbitError(
+                    "out= rebind is not supported for TMR-protected "
+                    "queries (the planes' storage moves as a set)")
+            acc = _new_acc()
+            try:
+                res = self.reliability.run_query(expression, env,
+                                                 out_name=out_name,
+                                                 acc=acc)
+            finally:
+                st = OpStats()
+                st.merge(acc["stats"])
+                st.bytes_touched += \
+                    (self.store.bytes_to_device - up_before) + \
+                    (self.store.bytes_from_device - rd_before)
+                self._account(st)
+            return self.store.rebind(out, res) if out is not None else res
         for v in operands:
             self.store.ensure_resident(v, protect=operands)
         kwargs = {}

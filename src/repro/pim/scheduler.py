@@ -49,6 +49,7 @@ from ..core import expr as E
 from ..core.engine import OpStats
 from ..core.simulator import AmbitError
 from ..core.timing import refresh_schedule
+from .faults import FaultError
 
 Resource = Tuple[int, int]          # (device index, bank index)
 
@@ -95,6 +96,15 @@ class Ticket:
     rewritten_from: Optional[E.Expr] = None
     synthetic: bool = False
     cache_hit: bool = False
+    # Reliability (repro.pim.faults): a ticket whose recovery failed
+    # lands in FAILED (or CANCELLED when a dependency failed) with the
+    # fault message in ``error`` instead of crashing the drain;
+    # ``retries``/``backoff_ns`` bill the recovery attempts the
+    # reliability layer spent on it (backoff stretches the drain
+    # timeline, never the conservation-exact work ledgers).
+    error: Optional[str] = None
+    retries: int = 0
+    backoff_ns: float = 0.0
     # Why this query did not land in epoch 0: the packing constraints
     # that bound it (recorded by ``_form_epochs``). Each entry is one of
     # ``dep:#N`` (reads ticket N's result), ``read-after-write:<name>``,
@@ -191,6 +201,10 @@ class AsyncScheduler:
         self.last_drain: Optional[DrainReport] = None
         self._submitted = 0
         self._optimizer = None
+        # Set by the runtime when fault injection is configured: ticket
+        # execution routes through ReliabilityManager.execute_ticket
+        # (bounded retry, quarantine, TMR scrub) instead of _execute_plain.
+        self.reliability = None
         # DRAM timing of the backing device(s): drives the refresh-aware
         # drain timeline. None on accelerator stores (no DRAM model - a
         # ``refresh=True`` drain degrades to the plain timeline there).
@@ -486,7 +500,13 @@ class AsyncScheduler:
             else:
                 for t in tickets:
                     current = t
-                    self._execute(t)
+                    try:
+                        self._execute(t)
+                    except FaultError as e:
+                        # recovery lost: this ticket fails, the drain
+                        # (and every independent ticket) keeps going
+                        self._fail_ticket(t, e)
+                        continue
                     # keep results alive for queued consumers
                     for _ in range(consumers.get(id(t), 0)):
                         self.store.hold(t.result)
@@ -517,6 +537,11 @@ class AsyncScheduler:
             erep.ns = max(per_res.values(), default=0.0) + erep.channel_ns
             dur = erep.ns if epoch_cost is None else float(
                 epoch_cost(erep, [by_index[ti] for ti in erep.tickets]))
+            # Retry backoff is waiting, not work: it stretches the
+            # epoch's wall-clock interval (the latency-tail signal the
+            # fault benchmarks measure) but never the measured epoch ns
+            # or any conservation-exact ledger.
+            dur += sum(by_index[ti].backoff_ns for ti in erep.tickets)
             erep.start_ns = clock
             if refresh and self._timing is not None and dur > 0.0:
                 # Pausable epoch work threaded around refresh windows:
@@ -640,6 +665,39 @@ class AsyncScheduler:
                          "ticket", t.index, t.finished_ns)
 
     def _execute(self, t: Ticket) -> None:
+        """Run one query: through the reliability layer when fault
+        injection is wired (bounded retry / quarantine / TMR scrub),
+        plainly otherwise. Tickets depending on a failed/cancelled
+        ticket raise ``dep_failed`` here - their operand never
+        materialized - and cancel instead of crashing the drain."""
+        for nm in sorted(t.env):
+            v = t.env[nm]
+            if isinstance(v, Ticket) and v.state != DONE:
+                raise FaultError(
+                    f"operand {nm!r} of ticket #{t.index} is ticket "
+                    f"#{v.index}, which {v.state}", kind="dep_failed")
+        if self.reliability is not None:
+            self.reliability.execute_ticket(self, t)
+        else:
+            self._execute_plain(t)
+
+    def _fail_ticket(self, t: Ticket, e: FaultError) -> None:
+        """Surface an unrecoverable fault as a FAILED (or, for a missing
+        dependency, CANCELLED) ticket: error recorded, holds released,
+        labeled metric + trace event emitted. The costs of its failed
+        attempts were already committed to the ticket's ledgers."""
+        t.state = CANCELLED if e.kind == "dep_failed" else FAILED
+        t.error = str(e)
+        self._release_ticket_holds(t)
+        m = self.store.metrics
+        m.counter("ticket_failures").inc(1, reason=e.kind)
+        tr = self.store.tracer
+        if tr.enabled:
+            tr.instant(("scheduler", "failures"), "ticket_failed",
+                       "fault", args={"ticket": t.index,
+                                      "reason": e.kind})
+
+    def _execute_plain(self, t: Ticket) -> None:
         """Run one query through the planner (fault-ins charged to its
         ticket), release its operand holds, and publish the result."""
         store = self.store

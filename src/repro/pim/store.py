@@ -110,6 +110,14 @@ class ResidentBitVector:
     spilled: bool = False
     name: Optional[str] = None
     _host: Optional[BitVector] = None
+    # TMR protection (repro.pim.faults): a protected primary carries two
+    # independently-placed replica handles; the reliability layer
+    # executes queries replica-wise and majority-votes divergences.
+    protected: bool = False
+    replicas: List = dataclasses.field(default_factory=list)
+    # Set when a device failure destroyed dirty, unspilled chunks: the
+    # data is gone and any use raises FaultError(kind="data_loss").
+    lost: bool = False
 
     @property
     def n_slots(self) -> int:
@@ -315,7 +323,8 @@ class LruSpillBase:
         return self._read_back(rbv)
 
     def free(self, rbv) -> None:
-        self._check_handle(rbv)
+        self._check_handle(rbv, allow_lost=True)
+        rbv.lost = False                # freeing abandons the lost data
         # Notify BEFORE the held check: the result cache holds the
         # results (and references the operands) it caches, and dropping
         # those entries releases the cache's own hold - so a user can
@@ -335,6 +344,11 @@ class LruSpillBase:
         rbv.spilled = False
         rbv._host = None
         self._gen.pop(id(rbv), None)    # id may be reused after gc
+        # TMR planes live and die with their primary
+        replicas, rbv.replicas = list(getattr(rbv, "replicas", ())), []
+        for rep in replicas:
+            if not rep.freed:
+                self.free(rep)
 
     def rebind(self, out, res) -> object:
         """Move a fresh result's storage into an existing destination
@@ -386,11 +400,16 @@ class LruSpillBase:
         """Does the handle hold any device storage right now?"""
         return bool(rbv.slots)
 
-    def _check_handle(self, rbv) -> None:
+    def _check_handle(self, rbv, allow_lost: bool = False) -> None:
         """Valid for get/free/ensure_resident: live OR spilled."""
         if rbv.freed:
             raise AmbitError(
                 f"use of freed {self._handle_desc} {rbv!r}")
+        if getattr(rbv, "lost", False) and not allow_lost:
+            from .faults import FaultError
+            raise FaultError(
+                f"data loss: a failed device held the only copy of "
+                f"{rbv!r}", kind="data_loss")
         if self._owner_of(rbv) is not self:
             raise AmbitError(
                 f"{self._handle_desc} belongs to another store")
@@ -515,7 +534,7 @@ class PimStore(LruSpillBase):
     def put(self, bv: BitVector, policy: Optional[str] = None,
             near: Optional[Sequence[Slot]] = None,
             name: Optional[str] = None,
-            pin: bool = False) -> ResidentBitVector:
+            pin: bool = False, protect: bool = False) -> ResidentBitVector:
         chunks = self._chunk(bv)
         if len(chunks) == 0:
             raise AmbitError("cannot make a zero-row bitvector resident")
@@ -549,6 +568,19 @@ class PimStore(LruSpillBase):
             except AmbitError:          # over budget: undo the upload
                 self.free(rbv)
                 raise
+        if protect:
+            # TMR encode-on-put: two more independently-placed planes,
+            # each a full honest upload (3x storage, 3x channel bytes -
+            # the paper's stated price for the only homomorphic code).
+            try:
+                for k in (1, 2):
+                    rbv.replicas.append(self.put(
+                        bv, policy=policy, pin=pin,
+                        name=f"{name}/plane{k}" if name else None))
+            except AmbitError:
+                self.free(rbv)
+                raise
+            rbv.protected = True
         return rbv
 
     def _read_back(self, rbv: ResidentBitVector) -> BitVector:
@@ -622,16 +654,24 @@ class PimStore(LruSpillBase):
         planner will stage it through scratch at execution time). Returns
         the number of rows migrated."""
         moved = 0
-        for rbv, i, (tb, ts, _) in self.plan_migrations(operands):
-            try:
-                (new_slot,) = self.allocator.alloc_in(tb, ts, 1)
-            except AmbitError:
-                continue
-            self.device.migrate_row(rbv.slots[i], new_slot)
-            self.allocator.free([rbv.slots[i]])
-            rbv.slots[i] = new_slot
-            moved += 1
-        self.migrated_rows += moved
-        if moved:
-            self.metrics.counter("migrated_rows").inc(moved)
+        try:
+            for rbv, i, (tb, ts, _) in self.plan_migrations(operands):
+                try:
+                    (new_slot,) = self.allocator.alloc_in(tb, ts, 1)
+                except AmbitError:
+                    continue
+                try:
+                    self.device.migrate_row(rbv.slots[i], new_slot)
+                except AmbitError:  # injected fault: don't leak the row
+                    self.allocator.free([new_slot])
+                    raise
+                self.allocator.free([rbv.slots[i]])
+                rbv.slots[i] = new_slot
+                moved += 1
+        finally:
+            # bill even when a migration faults mid-plan: the moved rows
+            # really moved
+            self.migrated_rows += moved
+            if moved:
+                self.metrics.counter("migrated_rows").inc(moved)
         return moved

@@ -41,7 +41,7 @@ from ..core import expr as E
 from ..core.engine import OpStats
 from ..core.simulator import AmbitError
 from ..obs import NULL_TRACER, MetricsRegistry
-from ..pim.scheduler import EpochReport, Ticket
+from ..pim.scheduler import DONE, EpochReport, Ticket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +50,11 @@ class TenantQuota:
 
     max_inflight: int = 4       # admitted-but-unfinished query cap
     pin_bytes: int = 0          # pinned working-set budget
+    #: per-query deadline on the simulated clock (None = none). A
+    #: backlogged query already past its deadline is rejected at
+    #: admission (error result, never executed); one that finishes past
+    #: it is delivered but flagged ``timed_out``.
+    deadline_ns: Optional[float] = None
 
 
 @dataclasses.dataclass(eq=False)
@@ -67,6 +72,18 @@ class QueryRecord:
     finished_ns: float = -1.0
     ticket: Optional[Ticket] = None
     result: Optional[object] = None
+    # Reliability surface: unrecoverable faults land here as an error
+    # string (result stays None unless the host fallback served it);
+    # ``fallback`` marks results computed on the host after the PIM
+    # path failed; ``timed_out`` marks deadline misses.
+    error: Optional[str] = None
+    timed_out: bool = False
+    fallback: bool = False
+
+    @property
+    def ok(self) -> bool:
+        """The query produced a result (PIM path or host fallback)."""
+        return self.error is None
 
     @property
     def latency_ns(self) -> float:
@@ -103,6 +120,12 @@ class ServingReport:
     mean_ns: float = 0.0
     max_ns: float = 0.0
     stats: OpStats = dataclasses.field(default_factory=OpStats)
+    # Reliability: queries surfaced as errors (unrecoverable faults /
+    # admission-time deadline rejections), deadline misses, and queries
+    # served by the host (jnp) fallback after the PIM path failed.
+    errors: int = 0
+    timeouts: int = 0
+    fallbacks: int = 0
 
 
 def _nearest_rank(sorted_vals: List[float], p: float) -> float:
@@ -155,12 +178,18 @@ class QueryFrontend:
                  max_batch: int = 16,
                  default_quota: TenantQuota = TenantQuota(),
                  quotas: Optional[Dict[str, TenantQuota]] = None,
-                 epoch_cost: Optional[Callable] = None):
+                 epoch_cost: Optional[Callable] = None,
+                 optimize: bool = False):
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.runtime = runtime
         self.window_ns = float(window_ns)
         self.max_batch = int(max_batch)
+        # optimize=True routes every window drain through the scheduler's
+        # cost-based optimizer (CSE + result cache); cache hits are
+        # attributed per tenant on the shared opt_cache_hits counter.
+        self.optimize = bool(optimize)
+        self._host_engine = None    # lazy jnp fallback engine
         self.default_quota = default_quota
         self.quotas = dict(quotas or {})
         if epoch_cost is None and \
@@ -297,6 +326,28 @@ class QueryFrontend:
         keep: deque = deque()
         while self.backlog and len(self.window) < self.max_batch:
             q = self.backlog.popleft()
+            ddl = self.quota(q.tenant).deadline_ns
+            if ddl is not None and self.clock_ns - q.arrival_ns >= ddl:
+                # Already overdue while backlogged: reject instead of
+                # burning DRAM work on an answer nobody will take.
+                q.error = (f"deadline exceeded in backlog "
+                           f"({self.clock_ns - q.arrival_ns:.0f}ns "
+                           f">= {ddl:.0f}ns)")
+                q.timed_out = True
+                q.admitted_ns = self.clock_ns
+                q.finished_ns = self.clock_ns
+                self.report_counters.timeouts += 1
+                self.report_counters.errors += 1
+                self.metrics.counter("serve_timeouts").inc(
+                    1, tenant=q.tenant)
+                self.metrics.counter("serve_errors").inc(1, tenant=q.tenant)
+                if self.tracer.enabled:
+                    self.tracer.instant(("frontend",), "timeout", "serve",
+                                        ts_ns=self.clock_ns,
+                                        args={"tenant": q.tenant,
+                                              "seq": q.seq})
+                self.completed.append(q)
+                continue
             if self.inflight(q.tenant) >= self.quota(q.tenant).max_inflight:
                 keep.append(q)          # over quota: skip, don't block
                 self.metrics.counter("serve_quota_skips").inc(
@@ -325,7 +376,8 @@ class QueryFrontend:
         group, self.window = self.window, []
         start_ns = self.clock_ns
         self.runtime.drain(now_ns=self.clock_ns,
-                           epoch_cost=self._epoch_cost)
+                           epoch_cost=self._epoch_cost,
+                           optimize=self.optimize)
         rep = self.runtime.last_drain
         self.clock_ns = rep.end_ns
         rc = self.report_counters
@@ -341,14 +393,37 @@ class QueryFrontend:
         lat_hist = self.metrics.histogram("serve_latency_ns")
         queue_hist = self.metrics.histogram("serve_queue_ns")
         for q in group:
-            q.finished_ns = q.ticket.finished_ns
-            q.result = q.ticket.result
+            tk = q.ticket
+            q.finished_ns = tk.finished_ns if tk.finished_ns >= 0.0 \
+                else rep.end_ns
             self._inflight[q.tenant] = max(0, self.inflight(q.tenant) - 1)
-            lat_hist.observe(q.latency_ns)
-            queue_hist.observe(q.queue_ns)
-            self.metrics.counter("serve_completed").inc(1, tenant=q.tenant)
+            if tk.state == DONE:
+                q.result = tk.result
+                if tk.cache_hit:
+                    # per-tenant attribution on the shared optimizer
+                    # counter (total() stays the cross-tenant hit count)
+                    self.metrics.counter("opt_cache_hits").inc(
+                        1, tenant=q.tenant)
+            elif not self._try_host_fallback(q):
+                # PIM path unrecoverable and the host can't serve it:
+                # surface the fault as an error result, never a crash.
+                q.error = tk.error or f"ticket {tk.state}"
+                rc.errors += 1
+                self.metrics.counter("serve_errors").inc(1, tenant=q.tenant)
+            ddl = self.quota(q.tenant).deadline_ns
+            if ddl is not None and q.error is None \
+                    and q.latency_ns > ddl:
+                q.timed_out = True      # delivered, but past deadline
+                rc.timeouts += 1
+                self.metrics.counter("serve_timeouts").inc(
+                    1, tenant=q.tenant)
+            if q.error is None:
+                lat_hist.observe(q.latency_ns)
+                queue_hist.observe(q.queue_ns)
+                rc.completed += 1
+                self.metrics.counter("serve_completed").inc(
+                    1, tenant=q.tenant)
             self.completed.append(q)
-        rc.completed += len(group)
         self.metrics.counter("serve_drains").inc(1, reason=reason)
         self.metrics.counter("serve_batched_queries").inc(len(group))
         if self.tracer.enabled:
@@ -356,6 +431,37 @@ class QueryFrontend:
                              start_ns, rep.end_ns - start_ns,
                              args={"queries": len(group),
                                    "epochs": len(rep.epochs)})
+
+    def _try_host_fallback(self, q: QueryRecord) -> bool:
+        """Degraded-mode execution: when the PIM path failed, re-run the
+        query on the host ``jnp`` engine from the operands' host copies.
+        Only possible for unprotected handles whose data still exists -
+        a lost handle (the failed device held the only copy) or a broken
+        ticket dependency cannot be served. Billed honestly: reading a
+        device-resident dirty operand back is a normal charged ``get``."""
+        env: Dict[str, object] = {}
+        try:
+            for nm in sorted(q.env):
+                v = q.env[nm]
+                if isinstance(v, Ticket):
+                    return False    # upstream ticket failed with it
+                if getattr(v, "lost", False):
+                    return False    # the data died with its device
+                env[nm] = self.runtime.get(v)
+            if self._host_engine is None:
+                from ..core.engine import BulkBitwiseEngine
+                self._host_engine = BulkBitwiseEngine(backend="jnp")
+            q.result = self._host_engine.eval(q.expression, env)
+        except AmbitError:
+            return False
+        q.fallback = True
+        self.report_counters.fallbacks += 1
+        self.metrics.counter("serve_host_fallbacks").inc(1, tenant=q.tenant)
+        if self.tracer.enabled:
+            self.tracer.instant(("frontend",), "host_fallback", "serve",
+                                ts_ns=self.clock_ns,
+                                args={"tenant": q.tenant, "seq": q.seq})
+        return True
 
     # -- metrics ---------------------------------------------------------------
 
@@ -397,6 +503,9 @@ class QueryFrontend:
             "p99_ns": lat.percentile(0.99),
             "mean_ns": rep.mean_ns if lat.count() else None,
             "max_ns": rep.max_ns if lat.count() else None,
+            "errors": rep.errors,
+            "timeouts": rep.timeouts,
+            "fallbacks": rep.fallbacks,
         }
         return snap
 

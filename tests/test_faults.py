@@ -1,0 +1,488 @@
+"""Fault injection + reliability layer: differential recovery suite.
+
+The reliability contract is that faults change WHEN and WHERE work
+happens, never WHAT a surviving query computes:
+
+  * the injector is a pure function of ``(seed, structural key)`` - two
+    runs with one seed produce byte-identical fault/recovery ledgers,
+    independent of ``PYTHONHASHSEED`` (the CI chaos job re-runs this
+    shard and diffs the recorded ledgers across hash seeds);
+  * stuck-row faults are detected positionally, the scheduler retries
+    with re-placement, and the faulty rows are quarantined in the
+    allocator - results stay bit-identical to a fault-free run and the
+    allocator leaks nothing;
+  * TMR-protected queries survive silent corruption (weak cells,
+    transient flips) and single-device loss - including loss of planes
+    holding *dirty* results, rebuilt from surviving siblings - while
+    unprotected queries on a failed device degrade to a host fallback
+    through the serving frontend instead of crashing the drain;
+  * every retry, scrub, parity check and quarantine is billed work:
+    the fault-run ledgers dominate the fault-free ledgers and the
+    per-ticket accounting still reconciles with the runtime totals.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import AmbitError, BitVector, Expr
+from repro.core.ecc import TMRCodec
+from repro.pim import AmbitRuntime
+from repro.pim.faults import (FaultConfig, FaultError, FaultInjector,
+                              ReliabilityManager)
+from repro.serve import QueryFrontend, TenantQuota
+
+X, Y = Expr.var("x"), Expr.var("y")
+
+
+def _bits(rng, n=512):
+    return BitVector.from_bits(jnp.asarray(
+        rng.integers(0, 2, n, dtype=np.uint8)))
+
+
+def _rt(devices=1, injector=None, **kw):
+    kw.setdefault("banks", 4)
+    kw.setdefault("subarrays", 2)
+    kw.setdefault("words", 2)
+    return AmbitRuntime(devices=devices, fault_injector=injector, **kw)
+
+
+def _mix(rng, k, n_ops):
+    """Deterministic little query mix over ``n_ops`` operand names."""
+    i, j = int(k % n_ops), int((k + 1 + k // n_ops) % n_ops)
+    expr = [X ^ Y, X & Y, X | Y, (X & Y) ^ X][k % 4]
+    return expr, i, j
+
+
+# -- satellite: TMR encode aliasing -------------------------------------------
+
+
+def test_tmr_encode_replicas_are_independent():
+    from repro.core.engine import BulkBitwiseEngine
+    rng = np.random.default_rng(0)
+    bv = _bits(rng)
+    codec = TMRCodec(BulkBitwiseEngine(backend="jnp"))
+    reps = codec.encode(bv)
+    assert len(reps) == 3
+    # three distinct handles over three distinct buffers: scrubbing one
+    # plane must never silently rewrite its siblings
+    assert len({id(r) for r in reps}) == 3
+    assert len({id(r.data) for r in reps}) == 3
+    for r in reps:
+        assert bool((np.asarray(r.data) == np.asarray(bv.data)).all())
+    dec = codec.decode(reps)
+    assert bool((np.asarray(dec.data) == np.asarray(bv.data)).all())
+
+
+# -- determinism --------------------------------------------------------------
+
+
+def _chaos_session(seed):
+    """One seeded faulty session; returns (results, fault ledger)."""
+    rng = np.random.default_rng(7)
+    vs = [_bits(rng) for _ in range(4)]
+    inj = FaultInjector(FaultConfig(seed=seed, stuck_row_rate=0.25,
+                                    transient_rate=0.01,
+                                    weak_bit_rate=1e-4))
+    rt = _rt(injector=inj)
+    rt.reliability.max_retries = 16
+    hs = [rt.put(v) for v in vs]
+    hp = [rt.put(v, protect=True) for v in vs[:2]]
+    out = []
+    for k in range(6):
+        expr, i, j = _mix(rng, k, 4)
+        r = rt.eval(expr, {"x": hs[i], "y": hs[j]})
+        out.append(np.asarray(rt.get(r).data).copy())
+        rt.free(r)
+    r = rt.xor(hp[0], hp[1])
+    out.append(np.asarray(rt.get(r).data).copy())
+    return out, inj.ledger()
+
+
+def test_fault_ledger_is_seed_deterministic(record_ledger):
+    out_a, led_a = _chaos_session(3)
+    out_b, led_b = _chaos_session(3)
+    assert led_a == led_b
+    assert led_a                          # the session actually faulted
+    for a, b in zip(out_a, out_b):
+        assert bool((a == b).all())
+    _, led_c = _chaos_session(4)
+    assert led_c != led_a                 # the seed is load-bearing
+    # recorded for the CI chaos job: byte-diffed across PYTHONHASHSEED
+    record_ledger("fault_ledger_seed3", led_a)
+
+
+def test_injector_sampling_ignores_hash_seed():
+    # structural RNG keys only - never hash() - so the sampled fault
+    # universe is a pure function of the config seed
+    inj = FaultInjector(FaultConfig(seed=9, stuck_row_rate=0.1,
+                                    weak_bit_rate=1e-3))
+    inj.bind(data_rows=64)
+    stuck = [(b, s, r) for b in range(4) for s in range(2)
+             for r in range(32) if inj.row_stuck(0, (b, s, r))]
+    masks = {slot: inj.weak_mask(0, slot, 2) for slot in stuck}
+    inj2 = FaultInjector(FaultConfig(seed=9, stuck_row_rate=0.1,
+                                     weak_bit_rate=1e-3))
+    inj2.bind(data_rows=64)
+    assert stuck == [(b, s, r) for b in range(4) for s in range(2)
+                     for r in range(32) if inj2.row_stuck(0, (b, s, r))]
+    for slot, m in masks.items():
+        m2 = inj2.weak_mask(0, slot, 2)
+        assert (m is None) == (m2 is None)
+        if m is not None:
+            assert bool((m == m2).all())
+
+
+def test_weak_rate_tracks_analog_calibration():
+    from repro.core.analog import tra_failure_rate
+    cfg = FaultConfig(seed=5, variation=0.15, analog_trials=4000)
+    inj = FaultInjector(cfg)
+    expect = float(tra_failure_rate(0.15, n_trials=4000, seed=5))
+    assert inj.weak_rate == pytest.approx(expect)
+    assert inj.weak_rate > 0.0
+    # explicit override wins over the calibrated distribution
+    inj2 = FaultInjector(FaultConfig(seed=5, variation=0.15,
+                                     weak_bit_rate=1e-6))
+    assert inj2.weak_rate == 1e-6
+
+
+# -- stuck rows: retry + quarantine -------------------------------------------
+
+
+def test_stuck_rows_retry_to_bit_exact_results():
+    rng = np.random.default_rng(1)
+    vs = [_bits(rng) for _ in range(6)]
+    ref = _rt()
+    inj = FaultInjector(FaultConfig(seed=3, stuck_row_rate=0.3))
+    rt = _rt(injector=inj)
+    rt.reliability.max_retries = 16
+    hs = [ref.put(v) for v in vs]
+    hf = [rt.put(v) for v in vs]
+    for k in range(8):
+        expr, i, j = _mix(rng, k, 6)
+        a = np.asarray(ref.get(ref.eval(expr, {"x": hs[i], "y": hs[j]})).data)
+        b = np.asarray(rt.get(rt.eval(expr, {"x": hf[i], "y": hf[j]})).data)
+        assert bool((a == b).all())
+    counters = rt.metrics.snapshot()["counters"]
+    report = rt.allocator.report()
+    assert counters["fault_injected{kind=stuck_row}"] > 0
+    assert counters["quarantined_rows"] == report["quarantined"]
+    assert counters["ticket_retries{reason=stuck_row}"] > 0
+    # quarantined rows never come back: re-placement avoids every one
+    for slot in report["quarantined_slots"]:
+        assert not rt.allocator.is_live(tuple(slot))
+
+
+def test_quarantine_does_not_leak_rows():
+    rng = np.random.default_rng(2)
+    inj = FaultInjector(FaultConfig(seed=3, stuck_row_rate=0.3))
+    rt = _rt(injector=inj)
+    rt.reliability.max_retries = 16
+    hs = [rt.put(_bits(rng)) for _ in range(4)]
+    outs = [rt.eval(X ^ Y, {"x": hs[k % 4], "y": hs[(k + 1) % 4]})
+            for k in range(6)]
+    for h in outs + hs:
+        rt.free(h)
+    report = rt.allocator.report()
+    assert report["live"] == 0            # no leaked rows ...
+    assert report["quarantined"] > 0      # ... while retired rows stay out
+    # capacity already excludes the quarantine set: with nothing live,
+    # every remaining row is free
+    assert report["free"] == report["capacity"]
+
+
+def test_retries_exhausted_surface_a_fault_error():
+    rng = np.random.default_rng(3)
+    inj = FaultInjector(FaultConfig(seed=3, stuck_row_rate=0.9))
+    rt = _rt(injector=inj)
+    rt.reliability.max_retries = 1
+    a, b = rt.put(_bits(rng)), rt.put(_bits(rng))
+    with pytest.raises(FaultError):
+        for _ in range(12):               # near-certain double fault
+            rt.free(rt.eval(X ^ Y, {"x": a, "y": b}))
+
+
+# -- TMR protection: silent corruption ----------------------------------------
+
+
+@pytest.mark.parametrize("devices", [1, 4])
+def test_protected_queries_bit_exact_under_silent_faults(devices):
+    rng = np.random.default_rng(4)
+    vs = [_bits(rng, 2048 if devices > 1 else 512) for _ in range(4)]
+    ref = _rt(devices=devices)
+    inj = FaultInjector(FaultConfig(seed=7, transient_rate=0.02,
+                                    weak_bit_rate=1e-4))
+    rt = _rt(devices=devices, injector=inj)
+    hs = [ref.put(v) for v in vs]
+    hp = [rt.put(v, protect=True) for v in vs]
+    for k in range(10):
+        expr, i, j = _mix(rng, k, 4)
+        a = np.asarray(ref.get(ref.eval(expr, {"x": hs[i], "y": hs[j]})).data)
+        r = rt.eval(expr, {"x": hp[i], "y": hp[j]})
+        assert r.protected and len(r.replicas) == 2
+        b = np.asarray(rt.get(r).data)
+        assert bool((a == b).all())
+        rt.free(r)
+    counters = rt.metrics.snapshot()["counters"]
+    assert counters["protected_queries"] == 10
+    assert counters["parity_checks"] >= 10
+    if any("transient" in e or "weak" in e for e in inj.events):
+        assert counters.get("scrub_corrections", 0) > 0
+
+
+def test_scrub_is_billed_work():
+    rng = np.random.default_rng(5)
+    vs = [_bits(rng) for _ in range(2)]
+    clean = _rt(injector=FaultInjector(FaultConfig(seed=7)))
+    faulty = _rt(injector=FaultInjector(FaultConfig(seed=7,
+                                                    transient_rate=0.05)))
+    res = {}
+    for tag, rt in (("clean", clean), ("faulty", faulty)):
+        hp = [rt.put(v, protect=True) for v in vs]
+        for _ in range(6):
+            rt.free(rt.eval(X ^ Y, {"x": hp[0], "y": hp[1]}))
+        res[tag] = rt.session_stats.aap_count
+    # MAJ re-votes are native queries on the ledger, not free fixes
+    assert res["faulty"] > res["clean"]
+
+
+# -- device loss --------------------------------------------------------------
+
+
+def test_device_loss_protected_recovery_from_host_shadow():
+    rng = np.random.default_rng(6)
+    vs = [_bits(rng, 2048) for _ in range(4)]
+    ref = _rt(devices=4)
+    inj = FaultInjector(FaultConfig(seed=11))
+    rt = _rt(devices=4, injector=inj)
+    hs = [ref.put(v) for v in vs]
+    hp = [rt.put(v, protect=True) for v in vs]
+    inj.fail_device(2)
+    for k in range(4):
+        expr, i, j = _mix(rng, k, 4)
+        a = np.asarray(ref.get(ref.eval(expr, {"x": hs[i], "y": hs[j]})).data)
+        b = np.asarray(rt.get(rt.eval(expr, {"x": hp[i], "y": hp[j]})).data)
+        assert bool((a == b).all())
+    counters = rt.metrics.snapshot()["counters"]
+    assert counters["devices_lost"] == 1
+    assert counters["fault_evacuated_chunks"] > 0
+    assert rt.cluster.dead_devices == {2}
+
+
+def test_device_loss_dirty_plane_rebuilt_from_siblings():
+    rng = np.random.default_rng(6)
+    vs = [_bits(rng, 2048) for _ in range(3)]
+    ref = _rt(devices=4)
+    inj = FaultInjector(FaultConfig(seed=11))
+    rt = _rt(devices=4, injector=inj)
+    hs = [ref.put(v) for v in vs]
+    hp = [rt.put(v, protect=True) for v in vs]
+    r0 = rt.xor(hp[0], hp[1])             # dirty protected result
+    a0 = ref.xor(hs[0], hs[1])
+    inj.fail_device(1)                    # claims one plane of r0
+    got = np.asarray(
+        rt.get(rt.eval(X & Y, {"x": r0, "y": hp[2]})).data)
+    expect = np.asarray(
+        ref.get(ref.eval(X & Y, {"x": a0, "y": hs[2]})).data)
+    assert bool((got == expect).all())
+    counters = rt.metrics.snapshot()["counters"]
+    assert counters["fault_repaired_chunks"] > 0
+    assert any("repair plane" in e for e in inj.events)
+
+
+def test_result_planes_survive_any_single_device_loss():
+    # parity/scrub colocation must not collapse the three planes onto
+    # one device: every chunk keeps at least two distinct homes
+    rng = np.random.default_rng(6)
+    inj = FaultInjector(FaultConfig(seed=11))
+    rt = _rt(devices=4, injector=inj)
+    hp = [rt.put(_bits(rng, 2048), protect=True) for _ in range(2)]
+    r = rt.xor(hp[0], hp[1])
+    planes = [r] + list(r.replicas)
+    for i in range(r.n_slots):
+        homes = {p.slots[i][0] for p in planes}
+        assert len(homes) >= 2
+
+
+def test_scheduled_device_failure_mid_drain():
+    rng = np.random.default_rng(8)
+    vs = [_bits(rng, 2048) for _ in range(4)]
+    ref = _rt(devices=4)
+    inj = FaultInjector(FaultConfig(seed=13, fail_device_after=((3, 40),)))
+    rt = _rt(devices=4, injector=inj)
+    hs = [ref.put(v) for v in vs]
+    hp = [rt.put(v, protect=True) for v in vs]
+    want, tickets = [], []
+    for k in range(6):
+        expr, i, j = _mix(rng, k, 4)
+        want.append(np.asarray(
+            ref.get(ref.eval(expr, {"x": hs[i], "y": hs[j]})).data))
+        tickets.append(rt.submit(expr, {"x": hp[i], "y": hp[j]}))
+    rt.drain()
+    for t, w in zip(tickets, want):
+        assert t.state == "done", t.error
+        assert bool((np.asarray(rt.get(t.result).data) == w).all())
+    assert 3 in rt.cluster.dead_devices
+    assert rt.metrics.snapshot()["counters"]["devices_lost"] == 1
+
+
+def test_single_device_loss_is_fatal_for_dirty_unprotected():
+    rng = np.random.default_rng(9)
+    inj = FaultInjector(FaultConfig(seed=5))
+    rt = _rt(injector=inj)
+    a, b = rt.put(_bits(rng)), rt.put(_bits(rng))
+    r = rt.xor(a, b)                      # dirty, device-only
+    inj.fail_device(0)
+    with pytest.raises(FaultError):
+        rt.get(rt.eval(X ^ Y, {"x": r, "y": a}))
+
+
+# -- frontend degradation -----------------------------------------------------
+
+
+def test_frontend_host_fallback_after_device_loss():
+    rng = np.random.default_rng(10)
+    vs = [_bits(rng) for _ in range(4)]
+    inj = FaultInjector(FaultConfig(seed=5))
+    rt = _rt(injector=inj)
+    hs = [rt.put(v) for v in vs]
+    fe = QueryFrontend(rt, window_ns=1e9, max_batch=2)
+    inj.fail_device(0)
+    fe.submit("a", X ^ Y, {"x": hs[0], "y": hs[1]})
+    fe.submit("b", X & Y, {"x": hs[2], "y": hs[3]})
+    done = fe.take_completed()
+    assert [q.ok for q in done] == [True, True]
+    assert all(q.fallback for q in done)
+    expect = [np.asarray(vs[0].data ^ vs[1].data),
+              np.asarray(vs[2].data & vs[3].data)]
+    for q, w in zip(done, expect):
+        assert bool((np.asarray(q.result.data) == w).all())
+    rep = fe.report()
+    assert rep.fallbacks == 2 and rep.errors == 0
+    counters = rt.metrics.snapshot()["counters"]
+    assert counters["serve_host_fallbacks{tenant=a}"] == 1
+
+
+def test_frontend_surfaces_errors_instead_of_crashing():
+    rng = np.random.default_rng(11)
+    inj = FaultInjector(FaultConfig(seed=5))
+    rt = _rt(injector=inj)
+    a, b = rt.put(_bits(rng)), rt.put(_bits(rng))
+    lost = rt.xor(a, b)                   # dirty: unrecoverable on loss
+    fe = QueryFrontend(rt, window_ns=1e9, max_batch=2)
+    inj.fail_device(0)
+    fe.submit("t", X ^ Y, {"x": lost, "y": a})
+    fe.submit("t", X | Y, {"x": a, "y": b})
+    done = fe.take_completed()            # the drain itself survives
+    by_ok = sorted(done, key=lambda q: q.ok)
+    assert not by_ok[0].ok and by_ok[0].error
+    assert by_ok[1].ok and by_ok[1].fallback
+    assert fe.report().errors == 1
+
+
+def test_frontend_deadline_rejects_stale_backlog():
+    rng = np.random.default_rng(12)
+    rt = _rt()
+    hs = [rt.put(_bits(rng)) for _ in range(2)]
+    fe = QueryFrontend(
+        rt, window_ns=1e9, max_batch=8,
+        quotas={"slow": TenantQuota(max_inflight=1, deadline_ns=100.0)})
+    fe.submit("slow", X ^ Y, {"x": hs[0], "y": hs[1]}, arrival_ns=0.0)
+    stale = fe.submit("slow", X & Y, {"x": hs[0], "y": hs[1]},
+                      arrival_ns=0.0)     # queued behind the quota
+    fe.tick(1e6)
+    fe.flush()
+    done = fe.take_completed()
+    assert stale in done
+    assert stale.timed_out and not stale.ok and stale.result is None
+    rep = fe.report()
+    assert rep.timeouts >= 1 and rep.errors >= 1
+
+
+def test_frontend_marks_late_completions_timed_out():
+    rng = np.random.default_rng(13)
+    rt = _rt()
+    hs = [rt.put(_bits(rng)) for _ in range(2)]
+    fe = QueryFrontend(rt, window_ns=1e9, max_batch=8,
+                       quotas={"t": TenantQuota(deadline_ns=10.0)})
+    q = fe.submit("t", X ^ Y, {"x": hs[0], "y": hs[1]}, arrival_ns=0.0)
+    fe.tick(1e6)                          # ages far past the deadline
+    fe.flush()
+    assert q in fe.take_completed()
+    assert q.timed_out and q.ok           # late but correct
+    assert q.result is not None
+    assert fe.report().timeouts == 1
+
+
+def test_frontend_optimized_drain_attributes_cache_hits():
+    rng = np.random.default_rng(14)
+    rt = _rt()
+    hs = [rt.put(_bits(rng)) for _ in range(2)]
+    fe = QueryFrontend(rt, window_ns=1e9, max_batch=2, optimize=True)
+    for _ in range(2):
+        fe.submit("tA", X ^ Y, {"x": hs[0], "y": hs[1]})
+    first = fe.take_completed()
+    for _ in range(2):
+        fe.submit("tB", X ^ Y, {"x": hs[0], "y": hs[1]})
+    second = fe.take_completed()
+    assert all(q.ok for q in first + second)
+    a = np.asarray(rt.get(first[0].result).data)
+    for q in first + second:
+        assert bool((np.asarray(rt.get(q.result).data) == a).all())
+    counters = rt.metrics.snapshot()["counters"]
+    assert counters["opt_cache_hits{tenant=tB}"] == 2
+    assert "opt_cache_hits{tenant=tA}" not in counters
+
+
+# -- accounting ---------------------------------------------------------------
+
+
+def test_retry_and_scrub_costs_reconcile_with_ledger():
+    rng = np.random.default_rng(15)
+    vs = [_bits(rng) for _ in range(4)]
+    inj = FaultInjector(FaultConfig(seed=3, stuck_row_rate=0.25,
+                                    transient_rate=0.02))
+    rt = _rt(injector=inj)
+    rt.reliability.max_retries = 16
+    hs = [rt.put(v) for v in vs]
+    hp = [rt.put(v, protect=True) for v in vs[:2]]
+    tickets = [rt.submit(X ^ Y, {"x": hs[k % 4], "y": hs[(k + 1) % 4]})
+               for k in range(4)]
+    tickets.append(rt.submit(X & Y, {"x": hp[0], "y": hp[1]}))
+    rt.drain()
+    rep = rt.last_drain
+    assert all(t.state == "done" for t in tickets)
+    # energy/AAPs are additive: every attempt's work - retries, parity
+    # checks, scrub re-votes included - lands on exactly one ticket and
+    # the drain total owns all of it
+    assert sum(t.stats.aap_count for t in tickets) == rep.stats.aap_count
+    assert sum(t.stats.energy_nj for t in tickets) == pytest.approx(
+        rep.stats.energy_nj)
+    # wall-clock ns is overlapped epoch maxima: serial work dominates it
+    assert sum(t.stats.ns for t in tickets) >= rep.stats.ns - 1e-6
+    retried = [t for t in tickets if t.retries]
+    if retried:                           # backoff stretches wall clock only
+        assert all(t.backoff_ns > 0 for t in retried)
+        assert rep.end_ns >= max(t.finished_ns for t in tickets)
+    counters = rt.metrics.snapshot()["counters"]
+    n_inj = sum(1 for e in inj.events
+                if e.split()[0] in ("stuck_row", "transient", "weak_cell"))
+    got = sum(v for k, v in counters.items()
+              if k.startswith("fault_injected{"))
+    assert got == n_inj
+
+
+def test_chaos_env_hook_builds_injector(monkeypatch):
+    monkeypatch.setenv("PIM_CHAOS_RATE", "0.2")
+    monkeypatch.setenv("PIM_CHAOS_SEED", "17")
+    rt = _rt()
+    inj = rt.reliability.injector
+    assert inj is not None
+    assert inj.config.stuck_row_rate == 0.2
+    assert inj.config.seed == 17
+    monkeypatch.delenv("PIM_CHAOS_RATE")
+    rt2 = _rt()
+    assert rt2.reliability.injector is None
